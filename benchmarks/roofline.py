@@ -1,0 +1,77 @@
+"""Render the §Roofline table from dryrun_results.json.
+
+    PYTHONPATH=src python -m benchmarks.roofline [path/to/dryrun_results.json]
+
+Terms per (arch x shape), single-pod 16x16 mesh, TPU v5e constants:
+  compute    = HLO_FLOPs / peak;  memory = HLO_bytes / HBM_bw;
+  collective = collective_bytes / link_bw.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List
+
+
+def load(path: str = "dryrun_results.json") -> List[Dict]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def fmt_row(r: Dict) -> str:
+    if r["status"] == "skipped":
+        return (f"| {r['arch']} | {r['shape']} | skipped | — | — | — | — | — |"
+                f" {r['reason'][:40]}... |")
+    if r["status"] != "ok":
+        return (f"| {r['arch']} | {r['shape']} | FAILED | — | — | — | — | — |"
+                f" {r.get('error', '')[:40]} |")
+    tc, tm, tl = r["t_compute_s"], r["t_memory_s"], r["t_collective_s"]
+    frac = r.get("roofline_fraction", 0.0)
+    ufr = r.get("useful_flops_ratio", 0.0)
+    return (f"| {r['arch']} | {r['shape']} | {r['bottleneck']} "
+            f"| {tc:.3e} | {tm:.3e} | {tl:.3e} "
+            f"| {ufr:.3f} | {frac:.4f} | |")
+
+
+def table(results: List[Dict], mesh: str = "single") -> str:
+    rows = [r for r in results if r["mesh"] == mesh
+            and (mesh == "multi" or "t_compute_s" in r
+                 or r["status"] != "ok")]
+    out = [
+        "| arch | shape | bottleneck | t_compute (s) | t_memory (s) "
+        "| t_collective (s) | MODEL/HLO flops | roofline frac | note |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        out.append(fmt_row(r))
+    return "\n".join(out)
+
+
+def run(path: str = "dryrun_results.json") -> List[Dict]:
+    if not os.path.exists(path):
+        return [{"name": "roofline", "us_per_call": 0,
+                 "derived": f"no {path}; run launch/dryrun.py --all first"}]
+    results = load(path)
+    ok = [r for r in results if r["status"] == "ok" and "t_compute_s" in r]
+    rows = []
+    for r in ok:
+        t_bound = max(r["t_compute_s"], r["t_memory_s"],
+                      r["t_collective_s"])
+        rows.append({
+            "name": f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+            "us_per_call": t_bound * 1e6,
+            "derived": (f"bottleneck={r['bottleneck']};"
+                        f"frac={r.get('roofline_fraction', 0):.4f};"
+                        f"useful={r.get('useful_flops_ratio', 0):.3f}"),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"
+    print(table(load(path)))
+    print()
+    print("## multi-pod (runnability)")
+    print(table(load(path), mesh="multi"))

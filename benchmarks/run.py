@@ -1,0 +1,28 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV:
+  * fusion_*    — the paper's three worked examples: traffic collapse,
+                  launch counts, work replication, rule applications;
+  * kernel_*    — fused vs naive kernel wall times (host backend);
+  * roofline_*  — per (arch x shape x mesh) bound times from the dry-run
+                  artifact (if dryrun_results.json exists).
+"""
+
+from __future__ import annotations
+
+
+def main() -> None:
+    from benchmarks import fusion_bench, kernel_bench, roofline
+
+    rows = []
+    rows += fusion_bench.run()
+    rows += kernel_bench.run()
+    rows += roofline.run()
+
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Batched serving example: prefill + cached greedy decode for any of the
+10 assigned architectures (reduced configs on CPU).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch mamba2-2.7b
+    PYTHONPATH=src python examples/serve_lm.py --arch deepseek-v3-671b
+"""
+
+import argparse
+
+from repro.launch import serve as S
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+    S.main(["--arch", args.arch, "--reduced", "--batch", "4",
+            "--prompt-len", "16", "--gen", str(args.gen)])

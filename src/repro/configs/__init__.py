@@ -1,0 +1,78 @@
+"""Architecture registry + assigned input-shape sets.
+
+Every assigned architecture is selectable via ``--arch <id>``; each arch is
+paired with the LM shape set.  ``decode_*`` / ``long_*`` lower serve steps
+(one token against a filled KV cache), not train steps.  ``long_500k``
+requires sub-quadratic attention and is run only for the SSM/hybrid archs
+(skips recorded in EXPERIMENTS.md per the assignment note).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from repro.models.common import ModelConfig, reduced_config
+
+from repro.configs import (deepseek_v3_671b, internvl2_26b,
+                           jamba_1_5_large_398b, llama3_2_1b, mamba2_2_7b,
+                           qwen2_7b, qwen3_32b, qwen3_moe_30b_a3b,
+                           smollm_135m, whisper_tiny)
+
+ARCHS: Dict[str, ModelConfig] = {
+    c.name: c for c in [
+        qwen2_7b.CONFIG,
+        smollm_135m.CONFIG,
+        llama3_2_1b.CONFIG,
+        qwen3_32b.CONFIG,
+        internvl2_26b.CONFIG,
+        whisper_tiny.CONFIG,
+        mamba2_2_7b.CONFIG,
+        deepseek_v3_671b.CONFIG,
+        qwen3_moe_30b_a3b.CONFIG,
+        jamba_1_5_large_398b.CONFIG,
+    ]
+}
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+# archs whose attention is sub-quadratic in sequence length (SSM / hybrid):
+SUBQUADRATIC = {"mamba2-2.7b", "jamba-1.5-large-398b"}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
+    return ARCHS[arch]
+
+
+def get_reduced_config(arch: str, **overrides) -> ModelConfig:
+    return reduced_config(get_config(arch), **overrides)
+
+
+def cell_supported(arch: str, shape: str) -> Tuple[bool, str]:
+    """Is the (arch x shape) cell runnable?  Returns (ok, reason)."""
+    if shape == "long_500k" and arch not in SUBQUADRATIC:
+        return False, ("pure full-attention arch: 512k dense-attention "
+                       "decode skipped per assignment (sub-quadratic "
+                       "attention required)")
+    return True, ""
+
+
+def all_cells() -> List[Tuple[str, str]]:
+    return [(a, s) for a in ARCHS for s in SHAPES]

@@ -1,0 +1,25 @@
+"""whisper-tiny [audio]: enc-dec, conv frontend is a STUB per the
+assignment (``input_specs()`` provides precomputed frame embeddings).
+Uses LayerNorm -> the MLP runs through Flash-LayerNorm+Matmul (Example 2).
+[arXiv:2212.04356]"""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="encdec",
+    n_layers=4,           # decoder layers
+    n_enc_layers=4,
+    enc_seq=1500,
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=6,
+    d_head=64,
+    d_ff=1536,
+    vocab=51865,
+    rope_theta=0.0,       # learned/sinusoidal positions, no rope
+    norm="ln",
+    norm_eps=1e-5,
+    tie_embeddings=True,
+    max_seq=524288,       # decoder position table sized for long shapes
+)

@@ -1,0 +1,262 @@
+"""Array programs and their conversion to block programs (paper §2.2).
+
+An array program is a DAG of standard array operators.  The conversion is a
+lookup: each array operator expands to its predefined, *fully unfused* block
+subgraph (paper Table 2), using global memory between every stage.
+
+Conventions (paper): ``dot(a, b) = a @ b.T``, so the right-hand operand of
+every matrix multiplication is supplied transposed (``KT``, ``YT``...), and
+matrices are blocked row-major as lists of lists-of-blocks.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core import ops as O
+from repro.core.graph import GB, Graph, Ref, VType
+
+
+@dataclass(frozen=True)
+class AVal:
+    """An array-program value: a reference into the growing block program,
+    plus its blocked dims, e.g. ("M","K") for a matrix blocked both ways, or
+    ("M",) for a per-row-block list of vectors."""
+
+    ref: Ref
+    dims: Tuple[str, ...]
+    item: str = O.BLOCK
+
+
+class ArrayProgramBuilder:
+    """Builds the initial (unfused) block program for an array program."""
+
+    def __init__(self):
+        self.b = GB()
+
+    # -- program boundary ---------------------------------------------------
+    def input(self, name: str, dims: Sequence[str], item: str = O.BLOCK) -> AVal:
+        ref = self.b.inp(name, VType(tuple(dims), item))
+        return AVal(ref, tuple(dims), item)
+
+    def output(self, name: str, val: AVal) -> None:
+        self.b.out(name, val.ref)
+
+    def build(self) -> Graph:
+        g = self.b.g
+        g.validate()
+        return g
+
+    # -- Table 2: array operators as unfused block subgraphs -----------------
+
+    def elementwise(self, expr: str, *vals: AVal, **consts) -> AVal:
+        """Apply an elementwise op to (M,N)-blocked matrices (or any same-
+        shaped blocked values).  One map per blocked dim around a single
+        elementwise functional operator."""
+        dims = vals[0].dims
+        assert all(v.dims == dims for v in vals)
+        op = O.ew(expr, len(vals), **consts)
+
+        def build_level(level: int) -> Graph:
+            gb = GB()
+            if level == len(dims):
+                ins = [gb.inp(f"a{i}", VType((), v.item)) for i, v in enumerate(vals)]
+                out = gb.func(op, *ins)
+                gb.out("o", out)
+                return gb.g
+            inner = build_level(level + 1)
+            gb2 = GB()
+            ins = [gb2.inp(f"a{i}", VType(dims[level:], v.item))
+                   for i, v in enumerate(vals)]
+            outs = gb2.map(dims[level], inner, [(r, True) for r in ins])
+            gb2.out("o", outs[0])
+            return gb2.g
+
+        inner = build_level(1) if dims else None
+        if not dims:
+            ref = self.b.func(op, *[v.ref for v in vals])
+            return AVal(ref, (), vals[0].item)
+        outs = self.b.map(dims[0], inner, [(v.ref, True) for v in vals])
+        return AVal(outs[0], dims, vals[0].item)
+
+    def matmul_t(self, a: AVal, bt: AVal, out_dim: str) -> AVal:
+        """C = A @ B where A is blocked (M, K) and B is supplied transposed,
+        blocked (N, K); C is blocked (M, N) with N == out_dim.
+
+        Table 2 subgraph:  Map_M{ Map_N{ Map_K{dot} -> Reduce } } with the
+        K-list of partial products materialized in global memory (unfused).
+        """
+        (m_dim, k_dim), (n_dim, k2) = a.dims, bt.dims
+        assert k_dim == k2 and n_dim == out_dim, (a.dims, bt.dims, out_dim)
+
+        gk = GB()
+        ia = gk.inp("a", VType((), O.BLOCK))
+        ib = gk.inp("b", VType((), O.BLOCK))
+        gk.out("o", gk.func(O.DOT, ia, ib))
+
+        gn = GB()
+        arow = gn.inp("arow", VType((k_dim,), O.BLOCK))
+        brow = gn.inp("brow", VType((k_dim,), O.BLOCK))
+        parts = gn.map(k_dim, gk.g, [(arow, True), (brow, True)])
+        gn.out("o", gn.reduce(parts[0]))
+
+        gm = GB()
+        arow_m = gm.inp("arow", VType((k_dim,), O.BLOCK))
+        bt_m = gm.inp("bt", VType((n_dim, k_dim), O.BLOCK))
+        outs = gm.map(n_dim, gn.g, [(arow_m, False), (bt_m, True)])
+        gm.out("o", outs[0])
+
+        top = self.b.map(m_dim, gm.g, [(a.ref, True), (bt.ref, False)])
+        return AVal(top[0], (m_dim, n_dim))
+
+    def _row_map(self, dim: str, inner: Graph,
+                 inputs: Sequence[Tuple[AVal, bool]]) -> Ref:
+        """Map over the leading (row-block) dim of the given values."""
+        outs = self.b.map(dim, inner, [(v.ref, m) for v, m in inputs])
+        return outs[0]
+
+    def row_sums(self, x: AVal) -> AVal:
+        """Per-block row sums: (M, K) blocks -> (M, K) vectors."""
+        m_dim, k_dim = x.dims
+        gk = GB()
+        i = gk.inp("x", VType((), O.BLOCK))
+        gk.out("o", gk.func(O.ROW_SUM, i))
+        gm = GB()
+        xr = gm.inp("x", VType((k_dim,), O.BLOCK))
+        outs = gm.map(k_dim, gk.g, [(xr, True)])
+        gm.out("o", outs[0])
+        top = self.b.map(m_dim, gm.g, [(x.ref, True)])
+        return AVal(top[0], x.dims, O.VECTOR)
+
+    def reduce_rows(self, x: AVal, post_expr: str,
+                    extra: Sequence[AVal] = (), **consts) -> AVal:
+        """Reduce the inner list dim then apply an elementwise epilogue:
+        (M, K)-list of items -> (M,)-list of items.
+
+        ``extra`` are additional per-row-block items (dims (M,)) consumed as
+        later elementwise args."""
+        m_dim, k_dim = x.dims
+        gm = GB()
+        xs = gm.inp("xs", VType((k_dim,), x.item))
+        extras = [gm.inp(f"e{i}", VType((), v.item)) for i, v in enumerate(extra)]
+        red = gm.reduce(xs)
+        out = gm.func(O.ew(post_expr, 1 + len(extra), **consts), red, *extras)
+        gm.out("o", out)
+        ins = [(x.ref, True)] + [(v.ref, True) for v in extra]
+        top = self.b.map(m_dim, gm.g, ins)
+        return AVal(top[0], (m_dim,), O.VECTOR if x.item == O.VECTOR else x.item)
+
+    def row_apply(self, op: O.Op, x: AVal, c: AVal) -> AVal:
+        """row_scale / row_shift of (M, K) blocks by per-row-block vectors
+        c (dims (M,))."""
+        m_dim, k_dim = x.dims
+        gk = GB()
+        xb = gk.inp("x", VType((), O.BLOCK))
+        cv = gk.inp("c", VType((), c.item))
+        gk.out("o", gk.func(op, xb, cv))
+        gm = GB()
+        xr = gm.inp("x", VType((k_dim,), O.BLOCK))
+        cr = gm.inp("c", VType((), c.item))
+        outs = gm.map(k_dim, gk.g, [(xr, True), (cr, False)])
+        gm.out("o", outs[0])
+        top = self.b.map(m_dim, gm.g, [(x.ref, True), (c.ref, True)])
+        return AVal(top[0], x.dims)
+
+    # -- composite standard operators ----------------------------------------
+
+    def softmax_rows(self, x: AVal) -> AVal:
+        """Row-wise softmax of an (M, N)-blocked matrix: four block
+        operators (paper Example 1): exp map, row-sum map, reduce+reciprocal
+        map, row-scale map."""
+        e = self.elementwise("exp(a0)", x)
+        s = self.row_sums(e)
+        r = self.reduce_rows(s, "1/a0")
+        return self.row_apply(O.ROW_SCALE, e, r)
+
+    def layernorm_rows(self, x: AVal, kk: float) -> AVal:
+        """Row-wise LayerNorm of an (M, K)-blocked matrix (paper Example 2).
+
+        sigma(s1, s2) = sqrt(s2/k - (s1/k)^2); the program materializes the
+        negated mean (t5 = -s1/k) and uses row_shift to subtract it."""
+        s1 = self.row_sums(x)
+        nmean = self.reduce_rows(s1, "-a0/KK", KK=kk)
+        shifted = self.row_apply(O.ROW_SHIFT, x, nmean)
+        sq = self.elementwise("a0*a0", x)
+        s2 = self.row_sums(sq)
+        istd = self.reduce_rows(s2, "(a0/KK - a1*a1)**(-0.5)",
+                                extra=[nmean], KK=kk)
+        return self.row_apply(O.ROW_SCALE, shifted, istd)
+
+    def rmsnorm_rows(self, x: AVal, dd: float, eps: float = 0.0) -> AVal:
+        """Row-wise RMSNorm of an (M, D)-blocked matrix (paper Example 3).
+
+        Note: the paper's listing uses 1/sqrt(sum); real RMSNorm divides by
+        the dim (mean).  We use the correct mean form — immaterial to
+        fusion structure."""
+        sq = self.elementwise("a0*a0", x)
+        s = self.row_sums(sq)
+        irms = self.reduce_rows(s, f"1/sqrt(a0/DD + {eps!r})", DD=dd)
+        return self.row_apply(O.ROW_SCALE, x, irms)
+
+    def swish(self, x: AVal) -> AVal:
+        return self.elementwise("a0/(1+exp(-a0))", x)
+
+    def hadamard(self, a: AVal, b: AVal) -> AVal:
+        return self.elementwise("a0*a1", a, b)
+
+    def scale_const(self, x: AVal, c: float) -> AVal:
+        return self.elementwise("a0*C0", x, C0=c)
+
+
+# ---------------------------------------------------------------------------
+# The paper's three example programs
+# ---------------------------------------------------------------------------
+
+def attention_program(scale: float) -> Graph:
+    """Paper Example 1: Attention = matmul, /sqrt(d), softmax, matmul.
+
+    Inputs: Q blocked (M, D); K^T blocked (N, D); V^T blocked (L, N).
+    Output: O blocked (M, L)."""
+    ap = ArrayProgramBuilder()
+    q = ap.input("Q", ("M", "D"))
+    kt = ap.input("KT", ("N", "D"))
+    vt = ap.input("VT", ("L", "N"))
+    s = ap.matmul_t(q, kt, out_dim="N")
+    s = ap.scale_const(s, scale)
+    p = ap.softmax_rows(s)
+    o = ap.matmul_t(p, vt, out_dim="L")
+    ap.output("O", o)
+    return ap.build()
+
+
+def layernorm_matmul_program(kk: float) -> Graph:
+    """Paper Example 2: Z = LayerNorm_rows(X) @ Y.
+
+    Inputs: X blocked (M, K); Y^T blocked (N, K).  Output: Z (M, N)."""
+    ap = ArrayProgramBuilder()
+    x = ap.input("X", ("M", "K"))
+    yt = ap.input("YT", ("N", "K"))
+    ln = ap.layernorm_rows(x, kk)
+    z = ap.matmul_t(ln, yt, out_dim="N")
+    ap.output("Z", z)
+    return ap.build()
+
+
+def rmsnorm_ffn_swiglu_program(dd: float) -> Graph:
+    """Paper Example 3: O = (Swish(RMS(X) @ W) * (RMS(X) @ V)) @ U.
+
+    Inputs: X (M, D); W^T (K, D); V^T (K, D); U^T (N, K).  Output: O (M, N).
+    """
+    ap = ArrayProgramBuilder()
+    x = ap.input("X", ("M", "D"))
+    wt = ap.input("WT", ("K", "D"))
+    vt = ap.input("VT", ("K", "D"))
+    ut = ap.input("UT", ("N", "K"))
+    xn = ap.rmsnorm_rows(x, dd)
+    g = ap.swish(ap.matmul_t(xn, wt, out_dim="K"))
+    u = ap.matmul_t(xn, vt, out_dim="K")
+    h = ap.hadamard(g, u)
+    o = ap.matmul_t(h, ut, out_dim="N")
+    ap.output("O", o)
+    return ap.build()

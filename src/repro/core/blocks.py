@@ -1,0 +1,34 @@
+"""Utilities for splitting arrays into blocks and merging them back.
+
+The paper stores each matrix as a list of lists-of-blocks (row-major).
+"""
+
+from __future__ import annotations
+
+from typing import Any, List, Sequence, Tuple
+
+import numpy as np
+
+
+def split(arr, n_row_blocks: int, n_col_blocks: int) -> List[List[Any]]:
+    """Split a matrix into an ``n_row_blocks x n_col_blocks`` nested list."""
+    rows = np.array_split(arr, n_row_blocks, axis=0)
+    return [list(np.array_split(r, n_col_blocks, axis=1)) for r in rows]
+
+
+def split_rows(arr, n_row_blocks: int) -> List[Any]:
+    return list(np.array_split(arr, n_row_blocks, axis=0))
+
+
+def merge(blocks) -> np.ndarray:
+    """Merge a nested list (or flat list) of blocks back into one array."""
+    if isinstance(blocks[0], list):
+        return np.concatenate([np.concatenate(row, axis=1) for row in blocks],
+                              axis=0)
+    if getattr(blocks[0], "ndim", 0) == 2:
+        return np.concatenate(blocks, axis=0)
+    return np.concatenate(blocks, axis=0)
+
+
+def merge_vectors(vectors) -> np.ndarray:
+    return np.concatenate(vectors, axis=0)

@@ -1,0 +1,132 @@
+"""Compile a block program into an executable, jit-able JAX function.
+
+Lowering rules (block lists are stacked jnp arrays, one leading axis per
+list level — block decompositions must be uniform):
+
+  * parallel Map           -> jax.vmap   (mapped ports: in_axes=0)
+  * serial Map (Rule 3'd)  -> jax.lax.scan with the accumulated out-ports
+                              as f32 carries (paper: serial loop + accum)
+  * Reduce                 -> sum over the leading axis
+  * Func                   -> the op's jnp implementation
+
+This closes the compiler pipeline: array program -> (Table 2) block
+program -> fusion algorithm -> executable kernel.  ``compile_program``'s
+output is a plain JAX function: it can be jitted, differentiated, sharded
+with pjit, or lowered to HLO like any other.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ops as O
+from repro.core.graph import (FuncNode, Graph, InputNode, MapNode, MiscNode,
+                              OutputNode, ReduceNode)
+
+
+def stack_blocks(nested) -> jnp.ndarray:
+    """Nested lists of equal-shaped blocks -> one stacked array."""
+    if isinstance(nested, list):
+        return jnp.stack([stack_blocks(x) for x in nested], axis=0)
+    return jnp.asarray(nested)
+
+
+def _eval(g: Graph, inputs: Sequence[Any]) -> List[Any]:
+    env: Dict = {}
+    for nid, v in zip(g.input_ids, inputs):
+        env[(nid, 0)] = v
+    outs: Dict[int, Any] = {}
+    for nid in g.topo():
+        node = g.nodes[nid]
+        if isinstance(node, InputNode):
+            continue
+        ins = [env[(e.src, e.sp)] for e in g.in_edges(nid)]
+        if isinstance(node, OutputNode):
+            outs[nid] = ins[0]
+        elif isinstance(node, FuncNode):
+            env[(nid, 0)] = node.op.apply(jnp, *ins)
+        elif isinstance(node, ReduceNode):
+            env[(nid, 0)] = jnp.sum(ins[0].astype(jnp.float32),
+                                    axis=0).astype(ins[0].dtype)
+        elif isinstance(node, MiscNode):
+            res = node.fn(jnp, *ins)
+            if node.n_out() == 1:
+                env[(nid, 0)] = res
+            else:
+                for p, r in enumerate(res):
+                    env[(nid, p)] = r
+        elif isinstance(node, MapNode):
+            results = _lower_map(node, ins)
+            for p, r in enumerate(results):
+                env[(nid, p)] = r
+        else:
+            raise TypeError(node)
+    return [outs[oid] for oid in g.output_ids]
+
+
+def _lower_map(node: MapNode, ins: Sequence[Any]) -> List[Any]:
+    mapped_ins = [v for v, m in zip(ins, node.mapped) if m]
+    assert mapped_ins, "maps with no mapped input need static lengths"
+
+    def body(*per_iter):
+        it = iter(per_iter)
+        full = [next(it) if m else b
+                for b, m in zip(ins, node.mapped)]
+        return _eval(node.inner, full)
+
+    if not node.serial:
+        outs = jax.vmap(body, in_axes=[0] * len(mapped_ins))(*mapped_ins)
+        return list(outs)
+
+    # serial map: accumulated ports become f32 scan carries
+    first = jax.tree.map(lambda x: x[0], tuple(mapped_ins))
+    out_shapes = jax.eval_shape(lambda xs: body(*xs), first)
+
+    def scan_body(carry, xs):
+        res = body(*xs)
+        new_carry, ys = [], []
+        ci = 0
+        for p, r in enumerate(node.reduced):
+            if r is None:
+                ys.append(res[p])
+            else:
+                new_carry.append(carry[ci] + res[p].astype(jnp.float32))
+                ci += 1
+        return tuple(new_carry), tuple(ys)
+
+    carry0 = tuple(
+        jnp.zeros(out_shapes[p].shape, jnp.float32)
+        for p, r in enumerate(node.reduced) if r is not None)
+    carry, ys = jax.lax.scan(scan_body, carry0, tuple(mapped_ins))
+    results: List[Any] = []
+    ci = yi = 0
+    for p, r in enumerate(node.reduced):
+        if r is None:
+            results.append(ys[yi])
+            yi += 1
+        else:
+            results.append(carry[ci].astype(out_shapes[p].dtype))
+            ci += 1
+    return results
+
+
+def compile_program(g: Graph) -> Callable[..., List[Any]]:
+    """Return f(*stacked_inputs) -> [stacked_outputs], ready for jax.jit."""
+
+    def fn(*inputs):
+        return _eval(g, inputs)
+
+    return fn
+
+
+def run_jax(g: Graph, inputs: Dict[str, Any]) -> Dict[str, Any]:
+    """Convenience: run a program on nested-list block inputs via jit."""
+    stacked = [stack_blocks(inputs[g.nodes[nid].name])
+               for nid in g.input_ids]
+    out = jax.jit(compile_program(g))(*stacked)
+    return {g.nodes[oid].name: v
+            for oid, v in zip(g.output_ids, out)}

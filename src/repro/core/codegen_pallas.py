@@ -1,0 +1,262 @@
+"""Emit a Pallas TPU kernel directly from a fused block program.
+
+Scope: the program class the fusion algorithm produces for the paper's
+Example 1 — a spine of parallel maps (-> pallas grid dimensions) around
+one serial accumulator map (-> the trailing sequential grid dimension
+with f32 VMEM scratch carries), functional operators in the epilogue, and
+deeper serial maps evaluated in-kernel over whole-resident dims.
+
+`emit(fuse(attention_program(s))[-1], ...)` produces — automatically —
+the same kernel structure as the hand-written
+``kernels/flash_attention.py`` (modulo the online-softmax rescale, which
+is the appendix's separate numerics pass, exactly as in the paper).
+
+Layout convention: an IR input typed ``block[A,B]`` is one merged array
+of shape (A*bA, B*bB); dims on the grid are tiled by BlockSpecs, other
+dims are whole-resident in VMEM and in-kernel loops slice them.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.graph import (FuncNode, Graph, InputNode, MapNode,
+                              OutputNode, ReduceNode, VType)
+
+
+@dataclass
+class KernelPlan:
+    grid_dims: List[str]
+    red_dim: str
+    spine: List[int]  # map node ids, top level -> the serial map
+
+
+def plan(g: Graph) -> KernelPlan:
+    grid: List[str] = []
+    spine: List[int] = []
+    cur = g
+    while True:
+        maps = [n for n in cur.op_nodes()
+                if isinstance(cur.nodes[n], MapNode)]
+        if len(maps) != 1:
+            raise ValueError("expected a single-map spine (fused program)")
+        node: MapNode = cur.nodes[maps[0]]
+        spine.append(maps[0])
+        if node.serial:
+            return KernelPlan(grid, node.dim, spine)
+        grid.append(node.dim)
+        cur = node.inner
+
+
+def _split_whole(arr, vt_dims, dims, grid_axes, axis=0):
+    """Split non-grid list dims of a kernel block into nested python
+    lists (the IR's value layout)."""
+    if not vt_dims:
+        return arr
+    d = vt_dims[0]
+    if d in grid_axes:
+        return _split_whole(arr, vt_dims[1:], dims, grid_axes, axis + 1)
+    n = dims[d]
+    size = arr.shape[axis] // n
+    parts = []
+    for i in range(n):
+        idx = [slice(None)] * arr.ndim
+        idx[axis] = slice(i * size, (i + 1) * size)
+        parts.append(_split_whole(arr[tuple(idx)], vt_dims[1:], dims,
+                                  grid_axes, axis))
+    return parts
+
+
+def _eval_inner(g: Graph, env: Dict, dims: Dict[str, int]) -> List[Any]:
+    """In-kernel evaluation; list values are python lists of VMEM slices,
+    serial maps unroll statically."""
+    out: Dict[int, Any] = {}
+    for nid in g.topo():
+        node = g.nodes[nid]
+        if isinstance(node, InputNode):
+            continue
+        ins = [env[(e.src, e.sp)] for e in g.in_edges(nid)]
+        if isinstance(node, OutputNode):
+            out[nid] = ins[0]
+        elif isinstance(node, FuncNode):
+            env[(nid, 0)] = node.op.apply(jnp, *ins)
+        elif isinstance(node, ReduceNode):
+            acc = ins[0][0]
+            for item in ins[0][1:]:
+                acc = acc + item
+            env[(nid, 0)] = acc
+        elif isinstance(node, MapNode):
+            n = dims[node.dim]
+            accs: List[Any] = [None] * node.n_out()
+            lists: List[List[Any]] = [[] for _ in range(node.n_out())]
+            for i in range(n):
+                ienv: Dict = {}
+                for p, e in enumerate(g.in_edges(nid)):
+                    v = env[(e.src, e.sp)]
+                    if node.mapped[p]:
+                        v = v[i]
+                    ienv[(node.inner.input_ids[p], 0)] = v
+                res = _eval_inner(node.inner, ienv, dims)
+                for pp, r in enumerate(node.reduced):
+                    if r is None:
+                        lists[pp].append(res[pp])
+                    else:
+                        accs[pp] = res[pp] if accs[pp] is None else \
+                            accs[pp] + res[pp]
+            for pp, r in enumerate(node.reduced):
+                env[(nid, pp)] = lists[pp] if r is None else accs[pp]
+        else:
+            raise TypeError(node)
+    return [out[oid] for oid in g.output_ids]
+
+
+def emit(g: Graph, dims: Dict[str, int], blocks: Dict[str, int],
+         interpret: bool = True) -> Callable[..., jax.Array]:
+    kp = plan(g)
+    grid_axes = kp.grid_dims + [kp.red_dim]
+    in_names = [g.nodes[i].name for i in g.input_ids]
+    in_types = [g.nodes[i].vtype for i in g.input_ids]
+    n_red = dims[kp.red_dim]
+
+    # locate the serial map and its containing level
+    level = g
+    for nid in kp.spine[:-1]:
+        level = level.nodes[nid].inner
+    smid = kp.spine[-1]
+    smap: MapNode = level.nodes[smid]
+    n_acc = sum(r is not None for r in smap.reduced)
+
+    def spec_for(vt: VType) -> pl.BlockSpec:
+        shape = tuple(blocks[d] if d in grid_axes else blocks[d] * dims[d]
+                      for d in vt.dims)
+        tiled = tuple(d if d in grid_axes else None for d in vt.dims)
+
+        def index_map(*gids, tiled=tiled):
+            pos = dict(zip(grid_axes, gids))
+            return tuple(pos[d] if d is not None else 0 for d in tiled)
+
+        return pl.BlockSpec(shape, index_map)
+
+    def bind_spine(values_by_id: Dict[int, Any]):
+        """Walk parallel levels (grid-selected: ports pass through) and
+        return (serial-level graph, env keyed by input node id)."""
+        cur_g, cur_env = g, values_by_id
+        for nid in kp.spine[:-1]:
+            node: MapNode = cur_g.nodes[nid]
+            nxt = {}
+            for p, e in enumerate(cur_g.in_edges(nid)):
+                assert isinstance(cur_g.nodes[e.src], InputNode), \
+                    "spine ports must come from inputs (fused program)"
+                nxt[node.inner.input_ids[p]] = cur_env[e.src]
+            cur_g, cur_env = node.inner, nxt
+        return cur_g, cur_env
+
+    def serial_step(values_by_id: Dict[int, Any]) -> List[Any]:
+        lvl_g, lvl_env = bind_spine(values_by_id)
+        senv: Dict = {}
+        for p, e in enumerate(lvl_g.in_edges(smid)):
+            senv[(smap.inner.input_ids[p], 0)] = lvl_env[e.src]
+        res = _eval_inner(smap.inner, senv, dims)
+        return [res[pp] for pp, r in enumerate(smap.reduced)
+                if r is not None]
+
+    def epilogue(values_by_id: Dict[int, Any], acc_vals: List[Any]):
+        lvl_g, lvl_env = bind_spine(values_by_id)
+        env: Dict = {}
+        for iid in lvl_g.input_ids:
+            env[(iid, 0)] = lvl_env[iid]
+        ai = 0
+        for pp, r in enumerate(smap.reduced):
+            if r is not None:
+                env[(smid, pp)] = acc_vals[ai]
+                ai += 1
+        outs = {}
+        for nid in lvl_g.topo():
+            node = lvl_g.nodes[nid]
+            if isinstance(node, InputNode) or nid == smid:
+                continue
+            if isinstance(node, OutputNode):
+                e = lvl_g.in_edge(nid, 0)
+                outs[nid] = env[(e.src, e.sp)]
+            elif isinstance(node, FuncNode):
+                ins = [env[(e.src, e.sp)] for e in lvl_g.in_edges(nid)]
+                env[(nid, 0)] = node.op.apply(jnp, *ins)
+            else:
+                raise TypeError(f"epilogue: {node.label()}")
+        return outs[lvl_g.output_ids[0]]
+
+    def kernel(*refs):
+        in_refs = refs[:len(in_names)]
+        o_ref = refs[len(in_names)]
+        acc_refs = refs[len(in_names) + 1:]
+        ri = pl.program_id(len(grid_axes) - 1)
+
+        @pl.when(ri == 0)
+        def _init():
+            for a in acc_refs:
+                a[...] = jnp.zeros_like(a)
+
+        values = {iid: _split_whole(r[...], list(vt.dims), dims,
+                                    grid_axes)
+                  for iid, r, vt in zip(g.input_ids, in_refs, in_types)}
+        partials = serial_step(values)
+        for a, p_val in zip(acc_refs, partials):
+            a[...] += p_val.astype(jnp.float32)
+
+        @pl.when(ri == n_red - 1)
+        def _done():
+            res = epilogue(values, [a[...] for a in acc_refs])
+            o_ref[...] = res.astype(o_ref.dtype)
+
+    # accumulator shapes via abstract evaluation of one serial step
+    abstract_ins = [
+        jax.ShapeDtypeStruct(
+            tuple(blocks[d] if d in grid_axes else blocks[d] * dims[d]
+                  for d in vt.dims), jnp.float32)
+        for vt in in_types]
+
+    def one_step(*arrs):
+        values = {iid: _split_whole(a, list(vt.dims), dims, grid_axes)
+                  for iid, a, vt in zip(g.input_ids, arrs, in_types)}
+        return serial_step(values)
+
+    acc_shapes = jax.eval_shape(one_step, *abstract_ins)
+    scratch = [pltpu.VMEM(a.shape, jnp.float32) for a in acc_shapes]
+    assert len(acc_shapes) == n_acc
+
+    out_block = jax.eval_shape(
+        lambda arrs, accs: epilogue(
+            {iid: _split_whole(a, list(vt.dims), dims, grid_axes)
+             for iid, a, vt in zip(g.input_ids, arrs, in_types)},
+            list(accs)), tuple(abstract_ins), tuple(acc_shapes))
+
+    grid = tuple(dims[d] for d in grid_axes)
+    out_spec = pl.BlockSpec(
+        out_block.shape,
+        lambda *gids: tuple(gids[:len(kp.grid_dims)])
+        + (0,) * (len(out_block.shape) - len(kp.grid_dims)))
+    out_full = tuple(
+        s * (dims[d] if i < len(kp.grid_dims) else 1)
+        for i, (s, d) in enumerate(
+            zip(out_block.shape,
+                kp.grid_dims + [kp.red_dim] * 8)))
+
+    def wrapper(*merged_inputs):
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[spec_for(vt) for vt in in_types],
+            out_specs=out_spec,
+            out_shape=jax.ShapeDtypeStruct(out_full,
+                                           merged_inputs[0].dtype),
+            scratch_shapes=scratch,
+            interpret=interpret,
+        )(*merged_inputs)
+
+    return wrapper

@@ -1,0 +1,199 @@
+"""Emit paper-style listings (``forall``/``for``/``load``/``store``) for any
+block program.  Display-oriented: this is the notation used throughout the
+paper's worked examples; execution is the interpreter's job.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import ops as O
+from repro.core.graph import (FuncNode, Graph, InputNode, MapNode, MiscNode,
+                              OutputNode, ReduceNode)
+
+
+@dataclass
+class _Val:
+    """Either a local temp (name) or a view into global memory
+    (buffer name + accumulated indices, remaining dims)."""
+
+    name: str
+    idx: Tuple[str, ...] = ()
+    is_global: bool = False
+    n_dims: int = 0  # remaining list depth
+
+    def subscript(self) -> str:
+        if not self.idx:
+            return self.name
+        return f"{self.name}[{','.join(self.idx)}]"
+
+
+class _Emitter:
+    def __init__(self):
+        self.lines: List[str] = []
+        self.tmp = 0
+        self.buf = 0
+        self.used_idx: Dict[str, int] = {}
+
+    def temp(self) -> str:
+        self.tmp += 1
+        return f"t{self.tmp}"
+
+    def buffer(self) -> str:
+        self.buf += 1
+        return f"I{self.buf}"
+
+    def index(self, dim: str) -> str:
+        base = dim.lower()
+        k = self.used_idx.get(base, 0)
+        self.used_idx[base] = k + 1
+        return base if k == 0 else f"{base}{k+1}"
+
+    def release_index(self, dim: str) -> None:
+        base = dim.lower()
+        self.used_idx[base] -= 1
+
+    def emit(self, indent: int, text: str) -> None:
+        self.lines.append("    " * indent + text)
+
+
+def _localize(em: _Emitter, v: _Val, indent: int) -> str:
+    """Return a local temp holding v, emitting a load if it is global."""
+    if not v.is_global:
+        return v.name
+    t = em.temp()
+    em.emit(indent, f"{t} = load({v.subscript()})")
+    return t
+
+
+def _emit_graph(em: _Emitter, g: Graph, bindings: List[_Val],
+                indent: int) -> List[_Val]:
+    env: Dict[Tuple[int, int], _Val] = {}
+    local_cache: Dict[Tuple[int, int], str] = {}
+    for nid, b in zip(g.input_ids, bindings):
+        env[(nid, 0)] = b
+
+    def resolve(nid: int, port: int) -> str:
+        key = (nid, port)
+        if key in local_cache:
+            return local_cache[key]
+        t = _localize(em, env[key], indent_now[0])
+        local_cache[key] = t
+        return t
+
+    indent_now = [indent]
+    outs: Dict[int, _Val] = {}
+    for nid in g.topo():
+        node = g.nodes[nid]
+        if isinstance(node, InputNode):
+            continue
+        if isinstance(node, OutputNode):
+            e = g.in_edge(nid, 0)
+            outs[nid] = env[(e.src, e.sp)]
+        elif isinstance(node, FuncNode):
+            args = [resolve(e.src, e.sp) for e in g.in_edges(nid)]
+            t = em.temp()
+            em.emit(indent, f"{t} = {node.op.render(tuple(args))}")
+            env[(nid, 0)] = _Val(t)
+        elif isinstance(node, MiscNode):
+            args = [resolve(e.src, e.sp) for e in g.in_edges(nid)]
+            t = em.temp()
+            em.emit(indent, f"{t} = {node.name}({', '.join(args)})")
+            for p in range(node.n_out()):
+                env[(nid, p)] = _Val(t if node.n_out() == 1 else f"{t}[{p}]")
+        elif isinstance(node, ReduceNode):
+            e = g.in_edge(nid, 0)
+            src = env[(e.src, e.sp)]
+            acc = em.temp()
+            # reduce iterates the outermost remaining dim of a global list
+            dim = _dim_of(g, e)
+            ix = em.index(dim)
+            em.emit(indent, f"for {ix} in range({dim}):")
+            item = _Val(src.name, src.idx + (ix,), src.is_global,
+                        src.n_dims - 1)
+            t = _localize(em, item, indent + 1)
+            em.emit(indent + 1, f"{acc} += {t}")
+            em.release_index(dim)
+            env[(nid, 0)] = _Val(acc)
+        elif isinstance(node, MapNode):
+            ix = em.index(node.dim)
+            kw = "for" if node.serial else "forall"
+            em.emit(indent, f"{kw} {ix} in range({node.dim}):")
+            inner_b: List[_Val] = []
+            for p in range(node.n_in()):
+                e = g.in_edge(nid, p)
+                src = env[(e.src, e.sp)]
+                if node.mapped[p]:
+                    inner_b.append(_Val(src.name, src.idx + (ix,),
+                                        src.is_global, src.n_dims - 1))
+                else:
+                    inner_b.append(src)
+            # pre-allocate out-port values
+            port_vals: List[_Val] = []
+            accs: Dict[int, str] = {}
+            for p, r in enumerate(node.reduced):
+                if r is None:
+                    name = em.buffer()
+                    outer_idx = _outer_indices(env, g, nid)
+                    port_vals.append(_Val(name, outer_idx + (ix,),
+                                          is_global=True))
+                else:
+                    accs[p] = em.temp()
+                    port_vals.append(_Val(accs[p]))
+            inner_out = _emit_graph(em, node.inner, inner_b, indent + 1)
+            for p, r in enumerate(node.reduced):
+                ov = inner_out[p]
+                if r is None:
+                    if ov.is_global:
+                        # the inner value is already materialized; the port
+                        # is a view of that buffer (no extra store)
+                        env[(nid, p)] = _Val(ov.name, (), True,
+                                             max(ov.n_dims, 0) + 1)
+                        continue
+                    em.emit(indent + 1,
+                            f"store({ov.name}, {port_vals[p].subscript()})")
+                    pv = port_vals[p]
+                    env[(nid, p)] = _Val(pv.name, pv.idx[:-1], True, 1)
+                else:
+                    t = ov.name if not ov.is_global else _localize(
+                        em, ov, indent + 1)
+                    em.emit(indent + 1, f"{accs[p]} += {t}")
+                    env[(nid, p)] = _Val(accs[p])
+            em.release_index(node.dim)
+        else:
+            raise TypeError(node)
+    return [outs[oid] for oid in g.output_ids]
+
+
+def _dim_of(g: Graph, e) -> str:
+    types = getattr(g, "_cached_types", None)
+    if types is None:
+        try:
+            types = g.infer_types()
+        except Exception:
+            return "?"
+        g._cached_types = types
+    t = types.get((e.src, e.sp))
+    return t.dims[0] if t is not None and t.dims else "?"
+
+
+def _outer_indices(env, g, nid) -> Tuple[str, ...]:
+    return ()
+
+
+def render(g: Graph) -> str:
+    """Render a top-level block program as a paper-style listing."""
+    em = _Emitter()
+    bindings = [
+        _Val(g.nodes[nid].name, (), True, len(g.nodes[nid].vtype.dims))
+        for nid in g.input_ids
+    ]
+    out_vals = _emit_graph(em, g, bindings, 0)
+    for oid, v in zip(g.output_ids, out_vals):
+        name = g.nodes[oid].name
+        if v.is_global:
+            em.emit(0, f"# output {name} aliases {v.subscript()}")
+        else:
+            em.emit(0, f"store({v.name}, {name})")
+    return "\n".join(em.lines)

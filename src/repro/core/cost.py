@@ -1,0 +1,134 @@
+"""Traffic cost model (the fusion objective made explicit).
+
+Counts, symbolically from the hierarchy, exactly the ``load``/``store``
+instructions that the paper's listings contain:
+
+* a *store* for every item written into a buffered (list-typed) value.
+  Lists materialize at the map out-port that wraps a locally-produced item
+  (one ``store`` per iteration); outer ports that merely re-wrap an
+  already-global list are views, not extra traffic.
+* a *load* whenever a global item is brought into a local temp — once per
+  consuming loop iteration, shared between consumers at that level
+  (``t1 = load(X[m,d])`` serves every use of ``t1``); a reduce over a
+  global list loads each item.
+
+Also counts functional-operator applications (work; Rule 6 replicates work)
+and top-level operator count (kernel launches before candidate selection
+splits the program).
+"""
+
+from __future__ import annotations
+
+from collections import Counter
+from dataclasses import dataclass, field
+from math import prod
+from typing import Dict, List, Sequence, Tuple
+
+from repro.core.graph import (FuncNode, Graph, InputNode, MapNode, MiscNode,
+                              OutputNode, ReduceNode, VType)
+
+
+@dataclass
+class Traffic:
+    loads: Counter = field(default_factory=Counter)    # item kind -> count
+    stores: Counter = field(default_factory=Counter)
+    work: Counter = field(default_factory=Counter)     # op name -> count
+    launches: int = 0
+
+    def total_items(self) -> int:
+        return sum(self.loads.values()) + sum(self.stores.values())
+
+    def bytes_moved(self, item_bytes: Dict[str, int]) -> int:
+        return (sum(item_bytes.get(k, 0) * v for k, v in self.loads.items())
+                + sum(item_bytes.get(k, 0) * v for k, v in self.stores.items()))
+
+
+def _n_items(dims: Tuple[str, ...], sizes: Dict[str, int]) -> int:
+    return prod(sizes[d] for d in dims)
+
+
+def _walk(g: Graph, in_types: Sequence[VType], in_global: Sequence[bool],
+          mult: int, sizes: Dict[str, int], t: Traffic, top: bool) -> None:
+    types = g.infer_types(in_types)
+    glob: Dict[Tuple[int, int], bool] = {}
+    for nid, gl in zip(g.input_ids, in_global):
+        glob[(nid, 0)] = gl
+    order = g.topo()
+
+    for nid in order:
+        node = g.nodes[nid]
+        if isinstance(node, (InputNode, OutputNode)):
+            continue
+        for p in range(node.n_out()):
+            glob[(nid, p)] = types[(nid, p)].is_list
+
+    # loads of global items into local temps; reduce loads over global lists
+    for nid in order:
+        node = g.nodes[nid]
+        if isinstance(node, OutputNode):
+            continue
+        for p in range(node.n_out()):
+            vt = types[(nid, p)]
+            cons = [e for e in g.out_edges(nid, p)
+                    if not isinstance(g.nodes[e.dst], OutputNode)]
+            if glob[(nid, p)] and not vt.is_list and cons:
+                t.loads[vt.item] += mult
+                glob[(nid, p)] = False  # now in a local temp
+            if vt.is_list:
+                for e in cons:
+                    if isinstance(g.nodes[e.dst], ReduceNode):
+                        t.loads[vt.item] += mult * _n_items(vt.dims, sizes)
+
+    if top:  # item-typed program outputs get a single store
+        for oid in g.output_ids:
+            e = g.in_edge(oid, 0)
+            vt = types[(e.src, e.sp)]
+            if not vt.is_list:
+                t.stores[vt.item] += mult
+
+    # work + stores-at-materialization + recursion into maps
+    for nid in order:
+        node = g.nodes[nid]
+        if isinstance(node, FuncNode):
+            t.work[node.op.name] += mult
+        elif isinstance(node, ReduceNode):
+            e = g.in_edge(nid, 0)
+            vt = types[(e.src, e.sp)]
+            t.work["reduce_add"] += mult * max(_n_items(vt.dims, sizes) - 1, 0)
+        elif isinstance(node, MapNode):
+            dim_n = sizes[node.dim]
+            inner_types: List[VType] = []
+            inner_glob: List[bool] = []
+            for p in range(node.n_in()):
+                e = g.in_edge(nid, p)
+                vt = types[(e.src, e.sp)]
+                src_glob = glob[(e.src, e.sp)]
+                if node.mapped[p]:
+                    inner_types.append(vt.strip())
+                    inner_glob.append(src_glob)
+                else:
+                    inner_types.append(vt)
+                    inner_glob.append(src_glob)
+            inner_tmap = node.inner.infer_types(inner_types)
+            for p, oid in enumerate(node.inner.output_ids):
+                ie = node.inner.in_edge(oid, 0)
+                ivt = inner_tmap[(ie.src, ie.sp)]
+                consumed = bool(g.out_edges(nid, p))
+                if node.reduced[p] is None and not ivt.is_list and consumed:
+                    # the list materializes here: one store per iteration
+                    t.stores[ivt.item] += mult * dim_n
+            _walk(node.inner, inner_types, inner_glob, mult * dim_n, sizes, t,
+                  top=False)
+
+
+def traffic(g: Graph, sizes: Dict[str, int]) -> Traffic:
+    t = Traffic()
+    in_types = [g.nodes[nid].vtype for nid in g.input_ids]
+    _walk(g, in_types, [True] * len(in_types), 1, sizes, t, top=True)
+    t.launches = len(g.op_nodes())
+    return t
+
+
+def traffic_bytes(g: Graph, sizes: Dict[str, int],
+                  item_bytes: Dict[str, int]) -> int:
+    return traffic(g, sizes).bytes_moved(item_bytes)

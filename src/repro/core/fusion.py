@@ -1,0 +1,97 @@
+"""The fusion algorithm (paper §4).
+
+``fuse_no_extend`` applies rules in the paper's priority order
+``8 -> 4 -> 5 -> 9 -> 3 -> 1 -> 2`` on one graph level until fixpoint;
+``bfs_fuse_no_extend`` walks the hierarchy breadth-first;
+``bfs_extend`` finds the first Rule-6 opportunity anywhere;
+``fuse`` interleaves them, snapshotting after every no-extend fixpoint so
+the candidate-selection algorithm can pick among partially/fully fused
+variants (the paper's contract)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+from repro.core.graph import Graph, MapNode
+from repro.core.rules import RULES_PRIORITY, Rule6
+
+
+@dataclass
+class FusionTrace:
+    """Sequence of (rule_name, level_path) applications, for inspection and
+    for tests that compare against the paper's worked examples."""
+
+    steps: List[Tuple[str, str]] = field(default_factory=list)
+
+    def count(self, rule_name: str) -> int:
+        return sum(1 for r, _ in self.steps if r == rule_name)
+
+
+_MAX_STEPS = 10_000
+
+
+def _inner_graphs(g: Graph) -> List[Graph]:
+    return [g.nodes[n].inner for n in sorted(g.op_nodes())
+            if isinstance(g.nodes[n], MapNode)]
+
+
+def fuse_no_extend(g: Graph, trace: Optional[FusionTrace] = None,
+                   path: str = "/") -> bool:
+    """Apply all rules except Rule 6 on one level until fixpoint."""
+    changed_any = False
+    for _ in range(_MAX_STEPS):
+        for rule in RULES_PRIORITY:
+            m = rule.match(g)
+            if m is not None:
+                rule.apply(g, m)
+                if trace is not None:
+                    trace.steps.append((rule.name, path))
+                changed_any = True
+                break
+        else:
+            return changed_any
+    raise RuntimeError("fusion did not converge (rule ping-pong?)")
+
+
+def bfs_fuse_no_extend(g: Graph, trace: Optional[FusionTrace] = None) -> Graph:
+    queue: List[Tuple[Graph, str]] = [(g, "/")]
+    while queue:
+        cur, path = queue.pop(0)
+        fuse_no_extend(cur, trace, path)
+        for i, inner in enumerate(_inner_graphs(cur)):
+            queue.append((inner, f"{path}{i}/"))
+    return g
+
+
+def bfs_extend(g: Graph, trace: Optional[FusionTrace] = None) -> bool:
+    """Apply Rule 6 at the first (BFS) level where it matches."""
+    queue: List[Tuple[Graph, str]] = [(g, "/")]
+    while queue:
+        cur, path = queue.pop(0)
+        m = Rule6.match(cur)
+        if m is not None:
+            Rule6.apply(cur, m)
+            if trace is not None:
+                trace.steps.append((Rule6.name, path))
+            return True
+        for i, inner in enumerate(_inner_graphs(cur)):
+            queue.append((inner, f"{path}{i}/"))
+    return False
+
+
+def fuse(g: Graph, trace: Optional[FusionTrace] = None,
+         max_extensions: int = 16) -> List[Graph]:
+    """Run the full algorithm; returns the snapshot list (paper §4.3).
+
+    The last snapshot is the most aggressively fused program.  Snapshots are
+    independent clones — the input graph is not mutated."""
+    work = g.clone()
+    bfs_fuse_no_extend(work, trace)
+    snapshots = [work.clone()]
+    for _ in range(max_extensions):
+        if not bfs_extend(work, trace):
+            break
+        bfs_fuse_no_extend(work, trace)
+        snapshots.append(work.clone())
+    return snapshots

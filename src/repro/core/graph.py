@@ -1,0 +1,454 @@
+"""Block-program IR (paper §2).
+
+A block program is a hierarchical DAG.  Nodes:
+
+* ``InputNode`` / ``OutputNode`` — the program (or inner-graph) boundary.
+* ``FuncNode`` — a functional operator on items in local memory (Table 1).
+* ``MapNode`` — an embarrassingly-parallel loop over one dimension, holding
+  an inner ``Graph``.  Each in-port is either *mapped* (consumes one item of
+  a list per iteration) or *broadcast* (the whole value is visible to every
+  iteration).  Each out-port is either a plain list output or *reduced*
+  (paper Rule 3 moved a reduction inside: the port yields a single item and
+  the map lowers to a serial loop with an accumulator).
+* ``ReduceNode`` — reduces a list to a single item (circled ``+``).
+* ``MiscNode`` — escape hatch for operators outside the vocabulary.
+
+Value types (``VType``) record the list-nesting dims (outer first) and the
+item kind.  Edge *bufferedness* is derived, matching the paper: an edge is
+buffered iff it carries a list (which cannot fit in local memory) or is
+incident to program inputs/outputs (which live in global memory).
+"""
+
+from __future__ import annotations
+
+import copy
+from dataclasses import dataclass, field, replace
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.core import ops as O
+
+
+@dataclass(frozen=True)
+class VType:
+    dims: Tuple[str, ...] = ()
+    item: str = O.BLOCK
+
+    @property
+    def is_list(self) -> bool:
+        return len(self.dims) > 0
+
+    def strip(self) -> "VType":
+        return VType(self.dims[1:], self.item)
+
+    def wrap(self, dim: str) -> "VType":
+        return VType((dim,) + self.dims, self.item)
+
+    def __repr__(self):
+        if not self.dims:
+            return self.item
+        return f"{self.item}[{','.join(self.dims)}]"
+
+
+Ref = Tuple[int, int]  # (node_id, port)
+
+
+@dataclass(frozen=True)
+class Edge:
+    src: int
+    sp: int
+    dst: int
+    dp: int
+
+
+class Node:
+    id: int = -1
+
+    def n_in(self) -> int:
+        raise NotImplementedError
+
+    def n_out(self) -> int:
+        raise NotImplementedError
+
+    def label(self) -> str:
+        return type(self).__name__
+
+
+class InputNode(Node):
+    def __init__(self, name: str, vtype: VType):
+        self.name = name
+        self.vtype = vtype
+
+    def n_in(self):
+        return 0
+
+    def n_out(self):
+        return 1
+
+    def label(self):
+        return f"in:{self.name}:{self.vtype!r}"
+
+
+class OutputNode(Node):
+    def __init__(self, name: str):
+        self.name = name
+
+    def n_in(self):
+        return 1
+
+    def n_out(self):
+        return 0
+
+    def label(self):
+        return f"out:{self.name}"
+
+
+class FuncNode(Node):
+    def __init__(self, op: O.Op):
+        self.op = op
+
+    def n_in(self):
+        return self.op.n_in
+
+    def n_out(self):
+        return 1
+
+    def label(self):
+        return self.op.name if not isinstance(self.op, O.Elementwise) else f"ew[{self.op.expr}]"
+
+
+class ReduceNode(Node):
+    def __init__(self, op: str = "+"):
+        self.op = op
+
+    def n_in(self):
+        return 1
+
+    def n_out(self):
+        return 1
+
+    def label(self):
+        return f"reduce[{self.op}]"
+
+
+class MiscNode(Node):
+    """Anything outside the vocabulary; blocks all fusion around it.
+
+    ``type_fn`` optionally maps input VTypes to output VTypes (defaults to
+    one block item per out-port)."""
+
+    def __init__(self, name: str, n_in: int, n_out: int, fn=None,
+                 type_fn=None):
+        self.name = name
+        self._n_in = n_in
+        self._n_out = n_out
+        self.fn = fn
+        self.type_fn = type_fn
+
+    def n_in(self):
+        return self._n_in
+
+    def n_out(self):
+        return self._n_out
+
+    def label(self):
+        return f"misc:{self.name}"
+
+
+class MapNode(Node):
+    def __init__(self, dim: str, inner: "Graph", mapped: List[bool],
+                 reduced: List[Optional[str]]):
+        self.dim = dim
+        self.inner = inner
+        self.mapped = list(mapped)
+        self.reduced = list(reduced)
+        assert len(self.mapped) == len(inner.input_ids)
+        assert len(self.reduced) == len(inner.output_ids)
+
+    def n_in(self):
+        return len(self.mapped)
+
+    def n_out(self):
+        return len(self.reduced)
+
+    @property
+    def serial(self) -> bool:
+        """A map with an accumulated out-port lowers to a serial loop."""
+        return any(r is not None for r in self.reduced)
+
+    def label(self):
+        return f"map[{self.dim}]"
+
+
+class Graph:
+    """A flat graph; hierarchy comes from MapNode.inner."""
+
+    def __init__(self):
+        self.nodes: Dict[int, Node] = {}
+        self.edges: Set[Edge] = set()
+        self.input_ids: List[int] = []
+        self.output_ids: List[int] = []
+        self._next = 0
+
+    # -- construction -------------------------------------------------------
+    def add(self, node: Node) -> int:
+        nid = self._next
+        self._next += 1
+        node.id = nid
+        self.nodes[nid] = node
+        if isinstance(node, InputNode):
+            self.input_ids.append(nid)
+        elif isinstance(node, OutputNode):
+            self.output_ids.append(nid)
+        return nid
+
+    def connect(self, src: Ref, dst: Ref) -> None:
+        e = Edge(src[0], src[1], dst[0], dst[1])
+        assert e.src in self.nodes and e.dst in self.nodes
+        assert self.in_edge(e.dst, e.dp) is None, (
+            f"in-port {(e.dst, e.dp)} already connected")
+        self.edges.add(e)
+
+    # -- queries -------------------------------------------------------------
+    def in_edge(self, nid: int, port: int) -> Optional[Edge]:
+        for e in self.edges:
+            if e.dst == nid and e.dp == port:
+                return e
+        return None
+
+    def in_edges(self, nid: int) -> List[Edge]:
+        return sorted((e for e in self.edges if e.dst == nid),
+                      key=lambda e: e.dp)
+
+    def out_edges(self, nid: int, port: Optional[int] = None) -> List[Edge]:
+        return sorted((e for e in self.edges
+                       if e.src == nid and (port is None or e.sp == port)),
+                      key=lambda e: (e.sp, e.dst, e.dp))
+
+    def op_nodes(self) -> List[int]:
+        return [nid for nid, n in self.nodes.items()
+                if not isinstance(n, (InputNode, OutputNode))]
+
+    def topo(self) -> List[int]:
+        indeg = {nid: 0 for nid in self.nodes}
+        for e in self.edges:
+            indeg[e.dst] += 1
+        ready = sorted(nid for nid, d in indeg.items() if d == 0)
+        order: List[int] = []
+        while ready:
+            nid = ready.pop(0)
+            order.append(nid)
+            for e in sorted(self.out_edges(nid), key=lambda e: e.dst):
+                indeg[e.dst] -= 1
+                if indeg[e.dst] == 0:
+                    ready.append(e.dst)
+        if len(order) != len(self.nodes):
+            raise ValueError("cycle in block program graph")
+        return order
+
+    def reachable(self, a: int, b: int, skip_direct: bool = False) -> bool:
+        """Is b reachable from a?  skip_direct ignores direct a->b edges."""
+        frontier = [a]
+        seen = set()
+        while frontier:
+            n = frontier.pop()
+            for e in self.out_edges(n):
+                if skip_direct and n == a and e.dst == b:
+                    continue
+                if e.dst == b:
+                    return True
+                if e.dst not in seen:
+                    seen.add(e.dst)
+                    frontier.append(e.dst)
+        return False
+
+    # -- mutation -------------------------------------------------------------
+    def remove_node(self, nid: int) -> None:
+        self.edges = {e for e in self.edges if e.src != nid and e.dst != nid}
+        node = self.nodes.pop(nid)
+        if isinstance(node, InputNode):
+            self.input_ids.remove(nid)
+        elif isinstance(node, OutputNode):
+            self.output_ids.remove(nid)
+
+    def disconnect(self, e: Edge) -> None:
+        self.edges.discard(e)
+
+    def rewire_consumers(self, old: Ref, new: Ref) -> None:
+        """Make every consumer of old (src,port) read from new instead."""
+        moved = [e for e in self.edges if (e.src, e.sp) == old]
+        for e in moved:
+            self.edges.discard(e)
+            self.edges.add(Edge(new[0], new[1], e.dst, e.dp))
+
+    def clone(self) -> "Graph":
+        return copy.deepcopy(self)
+
+    # -- typing ----------------------------------------------------------------
+    def infer_types(self, in_types: Optional[Sequence[VType]] = None
+                    ) -> Dict[Ref, VType]:
+        """Return {(node, out_port): VType}; validates the whole hierarchy."""
+        types: Dict[Ref, VType] = {}
+        if in_types is None:
+            in_types = [self.nodes[i].vtype for i in self.input_ids]  # type: ignore[attr-defined]
+        for nid, t in zip(self.input_ids, in_types):
+            types[(nid, 0)] = t
+
+        for nid in self.topo():
+            node = self.nodes[nid]
+            if isinstance(node, InputNode):
+                continue
+            ins: List[VType] = []
+            for p in range(node.n_in()):
+                e = self.in_edge(nid, p)
+                if e is None:
+                    raise ValueError(f"unconnected in-port {p} of {node.label()}")
+                ins.append(types[(e.src, e.sp)])
+            if isinstance(node, OutputNode):
+                continue
+            if isinstance(node, FuncNode):
+                for t in ins:
+                    if t.is_list:
+                        raise TypeError(
+                            f"func {node.label()} fed a list {t!r}")
+                kind = node.op.result_kind(tuple(t.item for t in ins))
+                types[(nid, 0)] = VType((), kind)
+            elif isinstance(node, ReduceNode):
+                t = ins[0]
+                if not t.is_list:
+                    raise TypeError("reduce needs a list input")
+                types[(nid, 0)] = t.strip()
+            elif isinstance(node, MiscNode):
+                if node.type_fn is not None:
+                    outs = node.type_fn(ins)
+                    for p, t in enumerate(outs):
+                        types[(nid, p)] = t
+                else:
+                    for p in range(node.n_out()):
+                        types[(nid, p)] = VType((), O.BLOCK)
+            elif isinstance(node, MapNode):
+                inner_in: List[VType] = []
+                for p, t in enumerate(ins):
+                    if node.mapped[p]:
+                        if not t.is_list or t.dims[0] != node.dim:
+                            raise TypeError(
+                                f"map[{node.dim}] mapped port {p} got {t!r}")
+                        inner_in.append(t.strip())
+                    else:
+                        inner_in.append(t)
+                inner_types = node.inner.infer_types(inner_in)
+                for p, oid in enumerate(node.inner.output_ids):
+                    e = node.inner.in_edge(oid, 0)
+                    t = inner_types[(e.src, e.sp)]
+                    if node.reduced[p] is not None:
+                        types[(nid, p)] = t
+                    else:
+                        types[(nid, p)] = t.wrap(node.dim)
+            else:
+                raise TypeError(node)
+        return types
+
+    def validate(self, in_types: Optional[Sequence[VType]] = None) -> None:
+        self.infer_types(in_types)
+        # every in-port connected exactly once is enforced by connect();
+        # check out-ports of Outputs exist etc. via topo() (acyclicity).
+        self.topo()
+
+    # -- display -----------------------------------------------------------------
+    def describe(self, indent: int = 0) -> str:
+        pad = "  " * indent
+        lines = []
+        for nid in self.topo():
+            node = self.nodes[nid]
+            srcs = ", ".join(
+                f"{e.src}.{e.sp}" for e in self.in_edges(nid))
+            lines.append(f"{pad}{nid}: {node.label()}  <- [{srcs}]")
+            if isinstance(node, MapNode):
+                flags = "".join("m" if m else "b" for m in node.mapped)
+                reds = "".join("r" if r else "." for r in node.reduced)
+                lines.append(f"{pad}   ports in={flags} out={reds}")
+                lines.append(node.inner.describe(indent + 2))
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Builder
+# ---------------------------------------------------------------------------
+
+class GB:
+    """Small fluent builder for block-program graphs."""
+
+    def __init__(self):
+        self.g = Graph()
+
+    def inp(self, name: str, vtype: VType) -> Ref:
+        return (self.g.add(InputNode(name, vtype)), 0)
+
+    def out(self, name: str, src: Ref) -> int:
+        nid = self.g.add(OutputNode(name))
+        self.g.connect(src, (nid, 0))
+        return nid
+
+    def func(self, op: O.Op, *srcs: Ref) -> Ref:
+        nid = self.g.add(FuncNode(op))
+        for p, s in enumerate(srcs):
+            self.g.connect(s, (nid, p))
+        return (nid, 0)
+
+    def reduce(self, src: Ref, op: str = "+") -> Ref:
+        nid = self.g.add(ReduceNode(op))
+        self.g.connect(src, (nid, 0))
+        return (nid, 0)
+
+    def map(self, dim: str, inner: Graph, inputs: Sequence[Tuple[Ref, bool]],
+            reduced: Optional[Sequence[Optional[str]]] = None) -> List[Ref]:
+        if reduced is None:
+            reduced = [None] * len(inner.output_ids)
+        node = MapNode(dim, inner, [m for _, m in inputs], list(reduced))
+        nid = self.g.add(node)
+        for p, (src, _) in enumerate(inputs):
+            self.g.connect(src, (nid, p))
+        return [(nid, p) for p in range(node.n_out())]
+
+
+def buffered(types: Dict[Ref, VType], e: Edge, g: Graph) -> bool:
+    """Paper definition: buffered iff it carries a list, or touches program
+    inputs/outputs (which live in global memory)."""
+    t = types[(e.src, e.sp)]
+    if t.is_list:
+        return True
+    return isinstance(g.nodes[e.src], InputNode) or isinstance(
+        g.nodes[e.dst], OutputNode)
+
+
+def internal_buffered_edges(g: Graph,
+                            types: Optional[Dict[Ref, VType]] = None,
+                            ) -> List[Tuple[Graph, Edge]]:
+    """All buffered edges not incident to *program* inputs/outputs, across
+    the whole hierarchy.  An empty result == fully fused (paper's epilogues).
+
+    Edges inside a map that read from an inner InputNode whose data
+    ultimately comes from a program input are *loads from inputs* — they are
+    unavoidable and not counted here.  What we count is intermediate
+    materialization: a list-typed edge produced by an operator node.
+    """
+    if types is None:
+        types = g.infer_types()
+    found: List[Tuple[Graph, Edge]] = []
+    for e in g.edges:
+        t = types[(e.src, e.sp)]
+        src, dst = g.nodes[e.src], g.nodes[e.dst]
+        if t.is_list and not isinstance(src, InputNode) and not isinstance(
+                dst, OutputNode):
+            found.append((g, e))
+    for nid, node in g.nodes.items():
+        if isinstance(node, MapNode):
+            # recompute inner types
+            ins = []
+            for p in range(node.n_in()):
+                e = g.in_edge(nid, p)
+                t = types[(e.src, e.sp)]
+                ins.append(t.strip() if node.mapped[p] else t)
+            inner_types = node.inner.infer_types(ins)
+            for sub in internal_buffered_edges(node.inner, inner_types):
+                found.append(sub)
+    return found

@@ -1,0 +1,165 @@
+"""Numerical-safety pass (paper Appendix).
+
+Represents exponentiated values as significand–exponent pairs
+``x = S * e^t`` with a *row-wise shared exponent* (the variant the appendix
+identifies with Flash Attention's "online softmax").  The pass is applied
+*after* fusion, exactly as the paper prescribes: the fused graph is
+unchanged; only the value representation and the operator semantics change.
+
+Pair algebra (appendix):
+
+    (S1,t1) + (S2,t2)  = (S1*e^{t1-z} + S2*e^{t2-z}, z),  z = max(t1,t2)
+    (S1,t1) * (S2,t2)  = (S1*S2, t1+t2)
+    dot((S,t), B)      = (dot(S,B), t)          # t is per-row, rows survive
+    row_sum((S,t))     = (row_sum(S), t)
+    1/(S,t)            = (1/S, -t)
+
+Any elementwise operator whose top-level operation is ``exp`` produces a
+pair with ``t = rowmax(arg)``; pairs collapse back to plain values
+(``S * e^t``) when they reach a consumer without pair semantics or a
+program output.  Running the paper's fused Flash-Attention program under
+this executor reproduces online softmax bit-for-bit in behaviour: the two
+accumulators are rescaled by ``e^{t_old - z}`` whenever the running max
+grows.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Any
+
+import numpy as np
+
+from repro.core import ops as O
+from repro.core.graph import Graph
+from repro.core.interpreter import run as _run
+
+
+@dataclass
+class SEPair:
+    """Significand block/vector + per-row (or scalar) exponent."""
+
+    s: Any
+    t: Any
+
+    def materialize(self, xp):
+        t = xp.asarray(self.t)
+        s = xp.asarray(self.s)
+        if t.ndim == 1 and s.ndim == 2:
+            return s * xp.exp(t)[:, None]
+        return s * xp.exp(t)
+
+
+def _rowmax(xp, a):
+    a = xp.asarray(a)
+    if a.ndim == 2:
+        return a.max(axis=1)
+    return a.max()
+
+
+def _top_level_exp(expr: str) -> bool:
+    """True iff the expression is exp(<...>) at the top level."""
+    e = expr.strip()
+    if not e.startswith("exp(") or not e.endswith(")"):
+        return False
+    depth = 0
+    for i, ch in enumerate(e[3:], start=3):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return i == len(e) - 1
+    return False
+
+
+def _plain(xp, v):
+    return v.materialize(xp) if isinstance(v, SEPair) else v
+
+
+def pair_add(xp, a, b):
+    if not isinstance(a, SEPair):
+        a = SEPair(a, xp.zeros_like(_rowmax(xp, a)))
+    if not isinstance(b, SEPair):
+        b = SEPair(b, xp.zeros_like(_rowmax(xp, b)))
+    z = xp.maximum(a.t, b.t)
+
+    def scale(p):
+        f = xp.exp(p.t - z)
+        s = xp.asarray(p.s)
+        if s.ndim == 2 and xp.asarray(f).ndim == 1:
+            return s * f[:, None]
+        return s * f
+
+    return SEPair(scale(a) + scale(b), z)
+
+
+def stabilized_apply(op: O.Op, xp, *args):
+    """Pair-aware operator semantics (the appendix's compiler pass)."""
+    if isinstance(op, O.Elementwise):
+        if _top_level_exp(op.expr):
+            # evaluate the exponent argument plainly, then split
+            inner = O.Elementwise(op.expr.strip()[4:-1], op.n_in,
+                                  dict(op.consts))
+            arg = inner.apply(xp, *[_plain(xp, a) for a in args])
+            z = _rowmax(xp, arg)
+            arg = xp.asarray(arg)
+            if arg.ndim == 2:
+                return SEPair(xp.exp(arg - z[:, None]), z)
+            return SEPair(xp.exp(arg - z), z)
+        if op.expr.strip() in ("1/a0", "1 / a0") and isinstance(args[0],
+                                                                SEPair):
+            return SEPair(1.0 / args[0].s, -args[0].t)
+        if op.expr.strip() in ("a0+a1", "a0 + a1") and any(
+                isinstance(a, SEPair) for a in args):
+            return pair_add(xp, *args)
+        if op.expr.strip() in ("a0*a1", "a0 * a1") and any(
+                isinstance(a, SEPair) for a in args):
+            a, b = args
+            if isinstance(a, SEPair) and isinstance(b, SEPair):
+                return SEPair(a.s * b.s, a.t + b.t)
+            p, q = (a, b) if isinstance(a, SEPair) else (b, a)
+            return SEPair(p.s * q, p.t)
+        return op.apply(xp, *[_plain(xp, a) for a in args])
+    if isinstance(op, O.RowSum) and isinstance(args[0], SEPair):
+        return SEPair(args[0].s.sum(axis=1), args[0].t)
+    if isinstance(op, O.Dot) and isinstance(args[0], SEPair):
+        b = _plain(xp, args[1])
+        return SEPair(args[0].s @ b.T, args[0].t)
+    if isinstance(op, O.RowScale):
+        a, c = args
+        if isinstance(c, SEPair):
+            sa = a.s if isinstance(a, SEPair) else a
+            ta = a.t if isinstance(a, SEPair) else 0.0
+            cs = xp.asarray(c.s)
+            scaled = sa * (cs[:, None] if cs.ndim == 1 else cs)
+            return SEPair(scaled, ta + c.t)
+        if isinstance(a, SEPair):
+            return SEPair(op.apply(xp, a.s, c), a.t)
+    return op.apply(xp, *[_plain(xp, a) for a in args])
+
+
+def stabilized_accum(acc, val, op: str, xp):
+    if acc is None:
+        return val
+    if op != "+":
+        raise NotImplementedError(op)
+    if isinstance(acc, SEPair) or isinstance(val, SEPair):
+        return pair_add(xp, acc, val)
+    return acc + val
+
+
+def run_stabilized(g: Graph, inputs, dims, xp=np):
+    """Run a block program under the appendix's numerical-safety pass."""
+    out = _run(g, inputs, dims, xp=xp, apply_fn=stabilized_apply,
+               accum_fn=stabilized_accum)
+
+    def mat(v):
+        if isinstance(v, SEPair):
+            return v.materialize(xp)
+        if isinstance(v, list):
+            return [mat(x) for x in v]
+        return v
+
+    return {k: mat(v) for k, v in out.items()}

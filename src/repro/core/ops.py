@@ -1,0 +1,235 @@
+"""Functional-operator vocabulary for block programs (paper Table 1).
+
+Each functional operator is a stateless function on *items* that live in
+local memory: blocks (2-D arrays), vectors (1-D), or scalars.
+
+NOTE on ``row_sum``: Table 1's printed numpy definition (``sum(a, axis=0)``)
+contradicts both its own prose ("sums the values in each row") and every use
+in the paper's worked examples (the softmax denominator, LayerNorm row
+statistics, and the ``row_scale`` constraint ``c.size == a.shape[0]`` all
+need per-row sums).  We use ``axis=1`` with ``r.size == a.shape[0]``, which
+makes all three examples type-check and validate numerically.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Tuple
+
+# Item kinds
+BLOCK = "block"
+VECTOR = "vector"
+SCALAR = "scalar"
+
+_SAFE_FNS = ("exp", "log", "sqrt", "maximum", "minimum", "abs", "tanh",
+             "where", "sign")
+
+
+def _env(xp) -> Dict[str, Any]:
+    env = {name: getattr(xp, name) for name in _SAFE_FNS if hasattr(xp, name)}
+    env["pi"] = math.pi
+    return env
+
+
+class Op:
+    """Base functional operator."""
+
+    name: str = "op"
+    n_in: int = 1
+
+    def result_kind(self, kinds: Tuple[str, ...]) -> str:
+        raise NotImplementedError
+
+    def apply(self, xp, *args):
+        raise NotImplementedError
+
+    def render(self, args: Tuple[str, ...]) -> str:
+        return f"{self.name}({', '.join(args)})"
+
+    def clone(self) -> "Op":
+        return self  # stateless ops are shared
+
+    # Structural equality for tests / dedup.
+    def signature(self) -> Tuple:
+        return (self.name,)
+
+    def __repr__(self):
+        return f"<{self.name}>"
+
+
+class Dot(Op):
+    """r = a @ b.T  (contraction over the shared last axis)."""
+
+    name = "dot"
+    n_in = 2
+
+    def result_kind(self, kinds):
+        assert kinds == (BLOCK, BLOCK), kinds
+        return BLOCK
+
+    def apply(self, xp, a, b):
+        return a @ b.T
+
+
+class Outer(Op):
+    """r = outer(a, b) for vectors a, b."""
+
+    name = "outer"
+    n_in = 2
+
+    def result_kind(self, kinds):
+        assert kinds == (VECTOR, VECTOR), kinds
+        return BLOCK
+
+    def apply(self, xp, a, b):
+        return xp.outer(a, b)
+
+
+class RowScale(Op):
+    """r = a * c[:, None] — scale each row of a block."""
+
+    name = "row_scale"
+    n_in = 2
+
+    def result_kind(self, kinds):
+        assert kinds[0] == BLOCK and kinds[1] in (VECTOR, SCALAR), kinds
+        return BLOCK
+
+    def apply(self, xp, a, c):
+        c = xp.asarray(c)
+        if c.ndim == 0:
+            return a * c
+        return a * c[:, None]
+
+
+class RowShift(Op):
+    """r = a + c[:, None] — add c_i to row i of a block."""
+
+    name = "row_shift"
+    n_in = 2
+
+    def result_kind(self, kinds):
+        assert kinds[0] == BLOCK and kinds[1] in (VECTOR, SCALAR), kinds
+        return BLOCK
+
+    def apply(self, xp, a, c):
+        c = xp.asarray(c)
+        if c.ndim == 0:
+            return a + c
+        return a + c[:, None]
+
+
+class RowSum(Op):
+    """r = a.sum(axis=1) — per-row sums (see module docstring)."""
+
+    name = "row_sum"
+    n_in = 1
+
+    def result_kind(self, kinds):
+        assert kinds == (BLOCK,), kinds
+        return VECTOR
+
+    def apply(self, xp, a):
+        return a.sum(axis=1)
+
+
+_ARG_RE = re.compile(r"\ba(\d+)\b")
+
+
+@dataclass
+class Elementwise(Op):
+    """An n-ary elementwise operator defined by an expression over a0..a{n-1}.
+
+    ``consts`` are named scalar constants usable in the expression.  Two
+    consecutive Elementwise nodes compose into one (paper Rule 9).
+    """
+
+    expr: str = "a0"
+    n_in: int = 1
+    consts: Dict[str, float] = field(default_factory=dict)
+    name: str = "ew"
+
+    def result_kind(self, kinds):
+        order = {SCALAR: 0, VECTOR: 1, BLOCK: 2}
+        return max(kinds, key=lambda k: order[k])
+
+    def apply(self, xp, *args):
+        env = _env(xp)
+        env.update(self.consts)
+        for i, a in enumerate(args):
+            env[f"a{i}"] = a
+        # __import__ must be reachable: numpy's overflow-warning machinery
+        # imports lazily inside ufuncs; everything else stays sandboxed.
+        return eval(self.expr,  # noqa: S307
+                    {"__builtins__": {"__import__": __import__}}, env)
+
+    def render(self, args):
+        out = _ARG_RE.sub(lambda m: args[int(m.group(1))], self.expr)
+        for k, v in self.consts.items():
+            out = re.sub(rf"\b{k}\b", repr(v), out)
+        return out
+
+    def signature(self):
+        return ("ew", self.expr, self.n_in, tuple(sorted(self.consts.items())))
+
+    def clone(self):
+        return Elementwise(self.expr, self.n_in, dict(self.consts))
+
+    def __repr__(self):
+        return f"<ew:{self.expr}>"
+
+
+def compose_elementwise(u: Elementwise, v: Elementwise, dport: int) -> Elementwise:
+    """Compose v after u, where u's output feeds v's input ``dport``.
+
+    New op args = u's args followed by v's remaining args (paper Rule 9).
+    """
+    consts = dict(u.consts)
+    v_expr = v.expr
+    # Rename v's consts on collision.
+    for k, val in v.consts.items():
+        nk = k
+        while nk in consts and consts[nk] != val:
+            nk = nk + "_"
+        if nk != k:
+            v_expr = re.sub(rf"\b{k}\b", nk, v_expr)
+        consts[nk] = val
+
+    n_new = u.n_in + v.n_in - 1
+
+    # Map v's argument indices into the composed argument list.
+    def v_arg(m):
+        i = int(m.group(1))
+        if i == dport:
+            return f"({u.expr})"
+        j = i if i < dport else i - 1
+        return f"a{u.n_in + j}__NEW"
+
+    expr = _ARG_RE.sub(v_arg, v_expr)
+    expr = expr.replace("__NEW", "")
+    return Elementwise(expr, n_new, consts)
+
+
+# ---------------------------------------------------------------------------
+# Shared instances / convenience constructors
+# ---------------------------------------------------------------------------
+
+DOT = Dot()
+OUTER = Outer()
+ROW_SCALE = RowScale()
+ROW_SHIFT = RowShift()
+ROW_SUM = RowSum()
+
+
+def ew(expr: str, n_in: int = 1, **consts) -> Elementwise:
+    return Elementwise(expr, n_in, consts)
+
+
+EW_ADD = ew("a0+a1", 2)
+EW_MUL = ew("a0*a1", 2)
+
+
+def is_elementwise(op: Op) -> bool:
+    return isinstance(op, Elementwise)

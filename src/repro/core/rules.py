@@ -1,0 +1,783 @@
+"""The paper's substitution rules (§3).
+
+Each rule has ``match(g) -> Match | None`` and ``apply(g, match)`` operating
+on one graph level (the fusion driver walks the hierarchy).  All rules are
+logic-preserving; the interpreter oracle verifies this in tests.
+
+Fusion rules:    1 fuse consecutive maps, 2 fuse sibling maps,
+                 3 fuse map with reduction.
+Companion rules: 4 swap scale/dot, 5 swap shift/dot, 6 extend map to the
+                 entire graph, 7 peel first iteration, 8 duplicate mapped
+                 scale, 9 fuse consecutive elementwise.
+"""
+
+from __future__ import annotations
+
+import copy
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import ops as O
+from repro.core.graph import (GB, Edge, FuncNode, Graph, InputNode, MapNode,
+                              MiscNode, OutputNode, Ref, ReduceNode, VType)
+
+
+@dataclass
+class Match:
+    rule: str
+    data: Dict = field(default_factory=dict)
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def copy_node(node):
+    if isinstance(node, InputNode):
+        return InputNode(node.name, node.vtype)
+    if isinstance(node, OutputNode):
+        return OutputNode(node.name)
+    if isinstance(node, FuncNode):
+        return FuncNode(node.op.clone())
+    if isinstance(node, ReduceNode):
+        return ReduceNode(node.op)
+    if isinstance(node, MiscNode):
+        return MiscNode(node.name, node.n_in(), node.n_out(), node.fn,
+                        node.type_fn)
+    if isinstance(node, MapNode):
+        return MapNode(node.dim, node.inner.clone(), list(node.mapped),
+                       list(node.reduced))
+    raise TypeError(node)
+
+
+def splice(dst: Graph, src: Graph) -> Dict[int, int]:
+    """Copy src's nodes (incl. boundary) and edges into dst; return id map."""
+    m: Dict[int, int] = {}
+    for nid in src.input_ids:
+        m[nid] = dst.add(copy_node(src.nodes[nid]))
+    for nid, node in src.nodes.items():
+        if isinstance(node, (InputNode, OutputNode)):
+            continue
+        m[nid] = dst.add(copy_node(node))
+    for nid in src.output_ids:
+        m[nid] = dst.add(copy_node(src.nodes[nid]))
+    for e in src.edges:
+        dst.connect((m[e.src], e.sp), (m[e.dst], e.dp))
+    return m
+
+
+def drop_input(g: Graph, nid: int, replacement: Optional[Ref]) -> None:
+    """Remove an InputNode, redirecting its consumers to ``replacement``."""
+    if replacement is not None:
+        g.rewire_consumers((nid, 0), replacement)
+    g.remove_node(nid)
+
+
+def _maps(g: Graph) -> List[int]:
+    return sorted(n for n in g.op_nodes() if isinstance(g.nodes[n], MapNode))
+
+
+def _source(g: Graph, nid: int, port: int) -> Ref:
+    e = g.in_edge(nid, port)
+    return (e.src, e.sp)
+
+
+def fuse_two_maps(g: Graph, uid: int, vid: int) -> int:
+    """Fuse same-dim maps u, v (u possibly feeding v) into one map.
+
+    Connecting edges must be list-typed on u's side and mapped on v's side
+    (the rule matchers guarantee this).  Shared (source, mappedness) in-ports
+    merge.  Returns the new node id."""
+    u: MapNode = g.nodes[uid]
+    v: MapNode = g.nodes[vid]
+    assert u.dim == v.dim
+
+    W = Graph()
+    um = splice(W, u.inner)
+    vm = splice(W, v.inner)
+
+    conn = [e for e in g.edges if e.src == uid and e.dst == vid]
+    for e in conn:
+        assert u.reduced[e.sp] is None and v.mapped[e.dp], (
+            "illegal connecting edge for map fusion")
+
+    # internalize connecting edges
+    consumed_u_ports = set()
+    dropped_v_inputs = set()
+    for e in conn:
+        u_out_inner = um[u.inner.output_ids[e.sp]]
+        src_ref = _source(W, u_out_inner, 0)
+        v_in_inner = vm[v.inner.input_ids[e.dp]]
+        drop_input(W, v_in_inner, src_ref)
+        dropped_v_inputs.add(e.dp)
+        consumed_u_ports.add(e.sp)
+
+    # drop u output ports with no external consumers
+    kept_u_out: List[int] = []
+    for sp in range(u.n_out()):
+        ext = [e for e in g.out_edges(uid, sp) if e.dst != vid]
+        if sp in consumed_u_ports and not ext:
+            oid = um[u.inner.output_ids[sp]]
+            W.remove_node(oid)
+        else:
+            kept_u_out.append(sp)
+
+    # merge identical shared inputs (same level-g source, same mappedness)
+    u_sources = {}
+    for p in range(u.n_in()):
+        u_sources[(_source(g, uid, p), u.mapped[p])] = p
+    kept_v_in: List[int] = []
+    for p in range(v.n_in()):
+        if p in dropped_v_inputs:
+            continue
+        key = (_source(g, vid, p), v.mapped[p])
+        if key in u_sources:
+            q = u_sources[key]
+            drop_input(W, vm[v.inner.input_ids[p]],
+                       (um[u.inner.input_ids[q]], 0))
+        else:
+            kept_v_in.append(p)
+
+    mapped = [u.mapped[p] for p in range(u.n_in())] + \
+             [v.mapped[p] for p in kept_v_in]
+    reduced = [u.reduced[sp] for sp in kept_u_out] + list(v.reduced)
+    newmap = MapNode(u.dim, W, mapped, reduced)
+
+    # capture external wiring before removal
+    u_in_srcs = [_source(g, uid, p) for p in range(u.n_in())]
+    v_in_srcs = [_source(g, vid, p) for p in kept_v_in]
+    u_out_consumers = {sp: [e for e in g.out_edges(uid, sp) if e.dst != vid]
+                       for sp in kept_u_out}
+    v_out_consumers = {sp: list(g.out_edges(vid, sp))
+                       for sp in range(v.n_out())}
+
+    g.remove_node(uid)
+    g.remove_node(vid)
+    wid = g.add(newmap)
+    for p, src in enumerate(u_in_srcs + v_in_srcs):
+        g.connect(src, (wid, p))
+    for i, sp in enumerate(kept_u_out):
+        for e in u_out_consumers[sp]:
+            g.connect((wid, i), (e.dst, e.dp))
+    off = len(kept_u_out)
+    for sp in range(v.n_out()):
+        for e in v_out_consumers[sp]:
+            g.connect((wid, off + sp), (e.dst, e.dp))
+    return wid
+
+
+# ---------------------------------------------------------------------------
+# Rule 1: fuse consecutive maps
+# ---------------------------------------------------------------------------
+
+class Rule1:
+    name = "rule1_fuse_consecutive_maps"
+
+    @staticmethod
+    def match(g: Graph) -> Optional[Match]:
+        for uid in _maps(g):
+            u = g.nodes[uid]
+            for vid in sorted({e.dst for e in g.out_edges(uid)}):
+                v = g.nodes.get(vid)
+                if not isinstance(v, MapNode) or v.dim != u.dim or vid == uid:
+                    continue
+                conn = [e for e in g.edges if e.src == uid and e.dst == vid]
+                if not all(u.reduced[e.sp] is None and v.mapped[e.dp]
+                           for e in conn):
+                    continue
+                if g.reachable(uid, vid, skip_direct=True):
+                    continue
+                return Match(Rule1.name, {"u": uid, "v": vid})
+        return None
+
+    @staticmethod
+    def apply(g: Graph, m: Match) -> None:
+        fuse_two_maps(g, m.data["u"], m.data["v"])
+
+
+# ---------------------------------------------------------------------------
+# Rule 2: fuse sibling maps (shared parent, not reachable from each other)
+# ---------------------------------------------------------------------------
+
+class Rule2:
+    name = "rule2_fuse_sibling_maps"
+
+    @staticmethod
+    def match(g: Graph) -> Optional[Match]:
+        ms = _maps(g)
+        for i, uid in enumerate(ms):
+            u = g.nodes[uid]
+            u_srcs = {(_source(g, uid, p), u.mapped[p])
+                      for p in range(u.n_in())}
+            for vid in ms[i + 1:]:
+                v = g.nodes[vid]
+                if v.dim != u.dim:
+                    continue
+                if any(e.src == uid and e.dst == vid or
+                       e.src == vid and e.dst == uid for e in g.edges):
+                    continue  # Rule 1 territory
+                v_srcs = {(_source(g, vid, p), v.mapped[p])
+                          for p in range(v.n_in())}
+                if not (u_srcs & v_srcs):
+                    continue  # no shared parent
+                if g.reachable(uid, vid) or g.reachable(vid, uid):
+                    continue
+                return Match(Rule2.name, {"u": uid, "v": vid})
+        return None
+
+    @staticmethod
+    def apply(g: Graph, m: Match) -> None:
+        fuse_two_maps(g, m.data["u"], m.data["v"])
+
+
+# ---------------------------------------------------------------------------
+# Rule 3: fuse map with reduction
+# ---------------------------------------------------------------------------
+
+class Rule3:
+    name = "rule3_fuse_map_reduction"
+
+    @staticmethod
+    def match(g: Graph) -> Optional[Match]:
+        for uid in _maps(g):
+            u = g.nodes[uid]
+            for sp in range(u.n_out()):
+                if u.reduced[sp] is not None:
+                    continue
+                outs = g.out_edges(uid, sp)
+                if len(outs) != 1:
+                    continue
+                rid = outs[0].dst
+                r = g.nodes[rid]
+                if not isinstance(r, ReduceNode):
+                    continue
+                # the port must wrap an item (reduction over exactly u.dim)
+                oid = u.inner.output_ids[sp]
+                ie = u.inner.in_edge(oid, 0)
+                inner_src = u.inner.nodes[ie.src]
+                if isinstance(inner_src, MapNode) and \
+                        inner_src.reduced[ie.sp] is None:
+                    continue  # inner value is itself a list
+                if isinstance(inner_src, InputNode) and \
+                        inner_src.vtype.is_list:
+                    continue
+                return Match(Rule3.name, {"u": uid, "sp": sp, "r": rid})
+        return None
+
+    @staticmethod
+    def apply(g: Graph, m: Match) -> None:
+        uid, sp, rid = m.data["u"], m.data["sp"], m.data["r"]
+        u: MapNode = g.nodes[uid]
+        r: ReduceNode = g.nodes[rid]
+        u.reduced[sp] = r.op
+        consumers = list(g.out_edges(rid, 0))
+        g.remove_node(rid)
+        for e in consumers:
+            g.connect((uid, sp), (e.dst, e.dp))
+
+
+# ---------------------------------------------------------------------------
+# Rule 4 / 5 shared structure: a mapped scale/shift feeding a matmul map
+# ---------------------------------------------------------------------------
+
+def _match_rowop_map(g: Graph, uid: int, opcls) -> Optional[Dict]:
+    """u is Map{single row_scale/row_shift}: block in mapped, c broadcast."""
+    u = g.nodes[uid]
+    if not isinstance(u, MapNode) or u.n_out() != 1 or u.reduced[0] is not None:
+        return None
+    ops = u.inner.op_nodes()
+    if len(ops) != 1:
+        return None
+    f = u.inner.nodes[ops[0]]
+    if not isinstance(f, FuncNode) or not isinstance(f.op, opcls):
+        return None
+    if u.n_in() != 2:
+        return None
+    # f arg0 <- inner input (block), f arg1 <- inner input (c)
+    e0 = u.inner.in_edge(ops[0], 0)
+    e1 = u.inner.in_edge(ops[0], 1)
+    if e0 is None or e1 is None:
+        return None
+    if not (isinstance(u.inner.nodes[e0.src], InputNode)
+            and isinstance(u.inner.nodes[e1.src], InputNode)):
+        return None
+    x_port = u.inner.input_ids.index(e0.src)
+    c_port = u.inner.input_ids.index(e1.src)
+    if not u.mapped[x_port] or u.mapped[c_port]:
+        return None
+    oe = u.inner.in_edge(u.inner.output_ids[0], 0)
+    if (oe.src, oe.sp) != (ops[0], 0):
+        return None
+    return {"u": uid, "x_port": x_port, "c_port": c_port}
+
+
+def _match_matmul_consumer(g: Graph, vid: int, dp: int,
+                           k_dim: str) -> Optional[Dict]:
+    """v is Map_A{ Map_K{dot} (-> Reduce)? } with the k-list entering at
+    broadcast port dp (feeding dot arg0) and weights at a mapped port."""
+    v = g.nodes[vid]
+    if not isinstance(v, MapNode) or v.mapped[dp] or v.n_in() != 2:
+        return None
+    if v.n_out() != 1:
+        return None
+    wp = 1 - dp
+    if not v.mapped[wp]:
+        return None
+    inner = v.inner
+    ops = inner.op_nodes()
+    mk_ids = [n for n in ops if isinstance(inner.nodes[n], MapNode)]
+    if len(mk_ids) != 1:
+        return None
+    mk = inner.nodes[mk_ids[0]]
+    if mk.dim != k_dim or mk.n_in() != 2 or mk.n_out() != 1:
+        return None
+    # x enters mk arg side feeding dot arg0; w feeds dot arg1
+    x_in = inner.input_ids[dp]
+    w_in = inner.input_ids[wp]
+    ex = inner.in_edge(mk_ids[0], 0)
+    e_ports = {p: inner.in_edge(mk_ids[0], p) for p in range(2)}
+    x_mk_port = w_mk_port = None
+    for p, e in e_ports.items():
+        if e.src == x_in:
+            x_mk_port = p
+        elif e.src == w_in:
+            w_mk_port = p
+    if x_mk_port is None or w_mk_port is None:
+        return None
+    if not (mk.mapped[x_mk_port] and mk.mapped[w_mk_port]):
+        return None
+    dot_ids = mk.inner.op_nodes()
+    if len(dot_ids) != 1:
+        return None
+    dot = mk.inner.nodes[dot_ids[0]]
+    if not isinstance(dot, FuncNode) or not isinstance(dot.op, O.Dot):
+        return None
+    # dot arg0 must be the (scaled) x operand
+    a0 = mk.inner.in_edge(dot_ids[0], 0)
+    if a0.src != mk.inner.input_ids[x_mk_port]:
+        return None
+    # mk out: reduced in place, or -> Reduce -> inner output
+    out_edge = inner.in_edge(inner.output_ids[0], 0)
+    if mk.reduced[0] is not None:
+        if (out_edge.src, out_edge.sp) != (mk_ids[0], 0):
+            return None
+        extra = []
+    else:
+        rids = [n for n in ops if isinstance(inner.nodes[n], ReduceNode)]
+        if len(rids) != 1:
+            return None
+        re = inner.in_edge(rids[0], 0)
+        if (re.src, re.sp) != (mk_ids[0], 0):
+            return None
+        if (out_edge.src, out_edge.sp) != (rids[0], 0):
+            return None
+        extra = rids
+    if len(ops) != 1 + len(extra):
+        return None
+    return {"v": vid, "dp": dp, "wp": wp}
+
+
+def _scale_map_graph(item_kind: str = O.VECTOR) -> Graph:
+    gb = GB()
+    y = gb.inp("y", VType((), O.BLOCK))
+    c = gb.inp("c", VType((), item_kind))
+    gb.out("o", gb.func(O.ROW_SCALE, y, c))
+    return gb.g
+
+
+class Rule4:
+    name = "rule4_swap_scale_dot"
+
+    @staticmethod
+    def match(g: Graph) -> Optional[Match]:
+        for uid in _maps(g):
+            mu = _match_rowop_map(g, uid, O.RowScale)
+            if not mu:
+                continue
+            outs = g.out_edges(uid, 0)
+            if len(outs) != 1:
+                continue  # Rule 8 handles fan-out
+            e = outs[0]
+            mv = _match_matmul_consumer(g, e.dst, e.dp, g.nodes[uid].dim)
+            if not mv:
+                continue
+            return Match(Rule4.name, {**mu, **mv})
+        return None
+
+    @staticmethod
+    def apply(g: Graph, m: Match) -> None:
+        uid, vid = m.data["u"], m.data["v"]
+        v: MapNode = g.nodes[vid]
+        x_src = _source(g, uid, m.data["x_port"])
+        c_src = _source(g, uid, m.data["c_port"])
+        # rewire v's broadcast port to the unscaled operand
+        old = g.in_edge(vid, m.data["dp"])
+        g.disconnect(old)
+        g.connect(x_src, (vid, m.data["dp"]))
+        g.remove_node(uid)
+        # append Map_A{row_scale} after v
+        s = MapNode(v.dim, _scale_map_graph(), [True, False], [None])
+        sid = g.add(s)
+        g.rewire_consumers((vid, 0), (sid, 0))
+        g.connect((vid, 0), (sid, 0))
+        g.connect(c_src, (sid, 1))
+
+
+class Rule5:
+    name = "rule5_swap_shift_dot"
+
+    @staticmethod
+    def match(g: Graph) -> Optional[Match]:
+        for uid in _maps(g):
+            mu = _match_rowop_map(g, uid, O.RowShift)
+            if not mu:
+                continue
+            outs = g.out_edges(uid, 0)
+            if len(outs) != 1:
+                continue
+            e = outs[0]
+            mv = _match_matmul_consumer(g, e.dst, e.dp, g.nodes[uid].dim)
+            if not mv:
+                continue
+            return Match(Rule5.name, {**mu, **mv})
+        return None
+
+    @staticmethod
+    def apply(g: Graph, m: Match) -> None:
+        uid, vid = m.data["u"], m.data["v"]
+        u: MapNode = g.nodes[uid]
+        v: MapNode = g.nodes[vid]
+        k_dim = u.dim
+        x_src = _source(g, uid, m.data["x_port"])
+        c_src = _source(g, uid, m.data["c_port"])
+        w_src = _source(g, vid, m.data["wp"])
+        old = g.in_edge(vid, m.data["dp"])
+        g.disconnect(old)
+        g.connect(x_src, (vid, m.data["dp"]))
+        g.remove_node(uid)
+
+        # V2 = Map_A{ Map_K{row_sum(w)} -> Reduce }: column sums of I2
+        gk = GB()
+        wb = gk.inp("w", VType((), O.BLOCK))
+        gk.out("o", gk.func(O.ROW_SUM, wb))
+        ga = GB()
+        wrow = ga.inp("w", VType((k_dim,), O.BLOCK))
+        parts = ga.map(k_dim, gk.g, [(wrow, True)])
+        ga.out("o", ga.reduce(parts[0]))
+        v2 = MapNode(v.dim, ga.g, [True], [None])
+        v2id = g.add(v2)
+        g.connect(w_src, (v2id, 0))
+
+        # C = Map_A{ add(outer(c, s), mm) }
+        gc = GB()
+        cvec = gc.inp("c", VType((), O.VECTOR))
+        svec = gc.inp("s", VType((), O.VECTOR))
+        mblk = gc.inp("m", VType((), O.BLOCK))
+        o = gc.func(O.OUTER, cvec, svec)
+        gc.out("o", gc.func(O.EW_ADD.clone(), o, mblk))
+        cnode = MapNode(v.dim, gc.g, [False, True, True], [None])
+        cid = g.add(cnode)
+        g.rewire_consumers((vid, 0), (cid, 0))
+        g.connect(c_src, (cid, 0))
+        g.connect((v2id, 0), (cid, 1))
+        g.connect((vid, 0), (cid, 2))
+
+
+# ---------------------------------------------------------------------------
+# Rule 6: extend a map to the entire graph (replicates work)
+# ---------------------------------------------------------------------------
+
+class Rule6:
+    name = "rule6_extend_map"
+
+    @staticmethod
+    def match(g: Graph) -> Optional[Match]:
+        op_ids = g.op_nodes()
+        if len(op_ids) < 2 or not g.output_ids:
+            return None
+        for vid in _maps(g):
+            v = g.nodes[vid]
+            # all program outputs fed by v
+            if not all(g.in_edge(oid, 0).src == vid for oid in g.output_ids):
+                continue
+            # every other op node's outputs stay internal (no Output edges)
+            ok = True
+            for nid in op_ids:
+                if nid == vid:
+                    continue
+                for e in g.out_edges(nid):
+                    if isinstance(g.nodes[e.dst], OutputNode):
+                        ok = False
+            if not ok:
+                continue
+            # edges from op nodes into v must be broadcast ports
+            for e in g.in_edges(vid):
+                if not isinstance(g.nodes[e.src], InputNode) and \
+                        v.mapped[e.dp]:
+                    ok = False
+            if not ok:
+                continue
+            # enablement: some other map at this level shares a dim with a
+            # top-level map inside v.inner
+            inner_dims = {v.inner.nodes[n].dim
+                          for n in v.inner.op_nodes()
+                          if isinstance(v.inner.nodes[n], MapNode)}
+            outer_dims = {g.nodes[n].dim for n in _maps(g) if n != vid}
+            if not (inner_dims & outer_dims):
+                continue
+            return Match(Rule6.name, {"v": vid})
+        return None
+
+    @staticmethod
+    def apply(g: Graph, m: Match) -> None:
+        vid = m.data["v"]
+        v: MapNode = g.nodes[vid]
+        types = g.infer_types()
+
+        W = Graph()
+        ivm = splice(W, v.inner)
+
+        pulled = [n for n in g.op_nodes() if n != vid]
+        order = [n for n in g.topo() if n in pulled]
+        copies: Dict[int, int] = {}
+        for nid in order:
+            copies[nid] = W.add(copy_node(g.nodes[nid]))
+        for e in g.edges:
+            if e.src in copies and e.dst in copies:
+                W.connect((copies[e.src], e.sp), (copies[e.dst], e.dp))
+
+        # v's in-ports: keep those fed by g-inputs; internalize the rest
+        kept_ports: List[int] = []
+        kept_srcs: List[Ref] = []
+        input_port_of_src: Dict[Ref, int] = {}
+        for p in range(v.n_in()):
+            src = _source(g, vid, p)
+            if isinstance(g.nodes[src[0]], InputNode):
+                kept_ports.append(p)
+                kept_srcs.append(src)
+                if not v.mapped[p]:
+                    input_port_of_src[src] = len(kept_ports) - 1
+            else:
+                inner_in = ivm[v.inner.input_ids[p]]
+                drop_input(W, inner_in, (copies[src[0]], src[1]))
+
+        new_input_ids = [ivm[v.inner.input_ids[p]] for p in kept_ports]
+        new_mapped = [v.mapped[p] for p in kept_ports]
+        new_srcs = list(kept_srcs)
+
+        # g-inputs consumed by pulled nodes become broadcast ports
+        extra_inputs: Dict[Ref, int] = {}
+        for e in sorted(g.edges, key=lambda e: (e.src, e.sp, e.dst, e.dp)):
+            if e.dst in copies and isinstance(g.nodes[e.src], InputNode):
+                key = (e.src, e.sp)
+                if key in input_port_of_src:
+                    tgt = new_input_ids[input_port_of_src[key]]
+                elif key in extra_inputs:
+                    tgt = extra_inputs[key]
+                else:
+                    vt = types[key]
+                    tgt = W.add(InputNode(g.nodes[e.src].name, vt))
+                    extra_inputs[key] = tgt
+                    new_input_ids.append(tgt)
+                    new_mapped.append(False)
+                    new_srcs.append(key)
+                W.connect((tgt, 0), (copies[e.dst], e.dp))
+
+        # fix W's boundary ordering
+        W.input_ids = new_input_ids
+        newmap = MapNode(v.dim, W, new_mapped, list(v.reduced))
+
+        out_consumers = {sp: list(g.out_edges(vid, sp))
+                         for sp in range(v.n_out())}
+        for nid in pulled:
+            g.remove_node(nid)
+        g.remove_node(vid)
+        wid = g.add(newmap)
+        for p, src in enumerate(new_srcs):
+            g.connect(src, (wid, p))
+        for sp, es in out_consumers.items():
+            for e in es:
+                g.connect((wid, sp), (e.dst, e.dp))
+
+
+# ---------------------------------------------------------------------------
+# Rule 7: peel off the first iteration (alternative to Rule 6)
+# ---------------------------------------------------------------------------
+
+class Rule7:
+    """Peel iteration 0 of a map into a standalone copy of its inner graph.
+
+    The peeled copy consumes element 0 of each mapped input; the residual
+    map runs iterations 1..X-1.  We realize "element 0" / "rest" with Misc
+    index/slice nodes so the transformation stays logic-preserving and
+    interpretable."""
+
+    name = "rule7_peel_first_iteration"
+
+    @staticmethod
+    def match(g: Graph, dim: Optional[str] = None) -> Optional[Match]:
+        for uid in _maps(g):
+            u = g.nodes[uid]
+            if dim is not None and u.dim != dim:
+                continue
+            if any(r is not None for r in u.reduced):
+                continue  # peeling accumulated maps needs a combine step
+            if not any(u.mapped):
+                continue
+            return Match(Rule7.name, {"u": uid})
+        return None
+
+    @staticmethod
+    def apply(g: Graph, m: Match) -> None:
+        uid = m.data["u"]
+        u: MapNode = g.nodes[uid]
+        srcs = [_source(g, uid, p) for p in range(u.n_in())]
+        out_consumers = {sp: list(g.out_edges(uid, sp))
+                         for sp in range(u.n_out())}
+
+        def head_fn(xp, xs):
+            return xs[0]
+
+        def tail_fn(xp, xs):
+            return xs[1:]
+
+        def cons_fn(xp, h, t):
+            return [h] + list(t)
+
+        def head_type(ins):
+            return [ins[0].strip()]
+
+        def tail_type(ins):
+            return [VType((u.dim + "_rest",) + ins[0].dims[1:], ins[0].item)]
+
+        def cons_type(ins):
+            return [VType((u.dim,) + ins[0].dims, ins[0].item)]
+
+        # peeled first iteration: the inner graph inlined at level g, with
+        # head nodes extracting element 0 of each mapped input
+        inner = u.inner.clone()
+        idmap: Dict[int, int] = {}
+        for nid, node in list(inner.nodes.items()):
+            if isinstance(node, (InputNode, OutputNode)):
+                continue
+            idmap[nid] = g.add(copy_node(node))
+        for e in inner.edges:
+            if e.src in idmap and e.dst in idmap:
+                g.connect((idmap[e.src], e.sp), (idmap[e.dst], e.dp))
+        for p, iid in enumerate(inner.input_ids):
+            if u.mapped[p]:
+                h = g.add(MiscNode("head", 1, 1, head_fn, type_fn=head_type))
+                g.connect(srcs[p], (h, 0))
+                src_ref: Ref = (h, 0)
+            else:
+                src_ref = srcs[p]
+            for e in inner.edges:
+                if e.src == iid and e.dst in idmap:
+                    g.connect(src_ref, (idmap[e.dst], e.dp))
+        peel_out: List[Ref] = []
+        for sp, oid in enumerate(inner.output_ids):
+            e = inner.in_edge(oid, 0)
+            peel_out.append((idmap[e.src], e.sp))
+
+        # residual map over the tails
+        tail_refs: List[Ref] = []
+        for p in range(u.n_in()):
+            if u.mapped[p]:
+                tnode = g.add(MiscNode("tail", 1, 1, tail_fn,
+                                       type_fn=tail_type))
+                g.connect(srcs[p], (tnode, 0))
+                tail_refs.append((tnode, 0))
+            else:
+                tail_refs.append(srcs[p])
+        rest = MapNode(u.dim + "_rest", u.inner.clone(), list(u.mapped),
+                       list(u.reduced))
+        rid = g.add(rest)
+        for p, src in enumerate(tail_refs):
+            g.connect(src, (rid, p))
+
+        # recombine: cons(head_result, rest_result)
+        g.remove_node(uid)
+        for sp in range(u.n_out()):
+            c = g.add(MiscNode("cons", 2, 1, cons_fn, type_fn=cons_type))
+            g.connect(peel_out[sp], (c, 0))
+            g.connect((rid, sp), (c, 1))
+            for e in out_consumers[sp]:
+                g.connect((c, 0), (e.dst, e.dp))
+
+
+# ---------------------------------------------------------------------------
+# Rule 8: duplicate a mapped scale feeding several matmuls
+# ---------------------------------------------------------------------------
+
+class Rule8:
+    name = "rule8_duplicate_mapped_scale"
+
+    @staticmethod
+    def match(g: Graph) -> Optional[Match]:
+        for uid in _maps(g):
+            mu = _match_rowop_map(g, uid, O.RowScale)
+            if not mu:
+                continue
+            outs = g.out_edges(uid, 0)
+            mm_edges = [e for e in outs
+                        if _match_matmul_consumer(g, e.dst, e.dp,
+                                                  g.nodes[uid].dim)]
+            if len(mm_edges) >= 2:
+                return Match(Rule8.name, {"u": uid, "edges": mm_edges[1:]})
+        return None
+
+    @staticmethod
+    def apply(g: Graph, m: Match) -> None:
+        uid = m.data["u"]
+        u: MapNode = g.nodes[uid]
+        srcs = [_source(g, uid, p) for p in range(u.n_in())]
+        for e in m.data["edges"]:
+            dup = copy_node(u)
+            did = g.add(dup)
+            for p, src in enumerate(srcs):
+                g.connect(src, (did, p))
+            g.disconnect(e)
+            g.connect((did, 0), (e.dst, e.dp))
+
+
+# ---------------------------------------------------------------------------
+# Rule 9: fuse consecutive elementwise operators
+# ---------------------------------------------------------------------------
+
+class Rule9:
+    name = "rule9_fuse_consecutive_elementwise"
+
+    @staticmethod
+    def match(g: Graph) -> Optional[Match]:
+        for uid in sorted(g.op_nodes()):
+            u = g.nodes[uid]
+            if not isinstance(u, FuncNode) or not O.is_elementwise(u.op):
+                continue
+            outs = g.out_edges(uid, 0)
+            if len(outs) != 1:
+                continue
+            vid, dp = outs[0].dst, outs[0].dp
+            v = g.nodes[vid]
+            if not isinstance(v, FuncNode) or not O.is_elementwise(v.op):
+                continue
+            return Match(Rule9.name, {"u": uid, "v": vid, "dp": dp})
+        return None
+
+    @staticmethod
+    def apply(g: Graph, m: Match) -> None:
+        uid, vid, dp = m.data["u"], m.data["v"], m.data["dp"]
+        u, v = g.nodes[uid], g.nodes[vid]
+        composed = O.compose_elementwise(u.op, v.op, dp)
+        u_srcs = [_source(g, uid, p) for p in range(u.n_in())]
+        v_srcs = [_source(g, vid, p) for p in range(v.n_in()) if p != dp]
+        consumers = list(g.out_edges(vid, 0))
+        g.remove_node(uid)
+        g.remove_node(vid)
+        nid = g.add(FuncNode(composed))
+        for p, src in enumerate(u_srcs + v_srcs):
+            g.connect(src, (nid, p))
+        for e in consumers:
+            g.connect((nid, 0), (e.dst, e.dp))
+
+
+RULES_PRIORITY = [Rule8, Rule4, Rule5, Rule9, Rule3, Rule1, Rule2]

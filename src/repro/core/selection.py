@@ -1,0 +1,74 @@
+"""Candidate-selection stand-in (the paper defers the real algorithm to
+"Blockbuster, Part 2" [9]; this module implements the *contract* §1/§4
+describe so the framework is complete):
+
+  * candidates are standard-operator subgraphs (here: whole programs, per
+    §4: "if the entire block program is entirely made up of standard
+    operators then the entire program can be one of the candidates");
+  * the fusion algorithm returns multiple snapshots per candidate;
+  * the selector evaluates each snapshot with the traffic cost model and
+    picks the cheapest implementation;
+  * the selector owns block-shape choice (paper: "the selection algorithm
+    is also responsible for choosing the block shapes ... and then
+    optimize all the shapes after-the-fact"): ``autotune`` sweeps the
+    block-count assignment per dimension and returns the best
+    (dims, snapshot) pair — including the degenerate counts (N=1, K=1)
+    that the paper notes eliminate Rule-6 work replication.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.core import cost as C
+from repro.core.fusion import fuse
+from repro.core.graph import Graph
+
+DEFAULT_ITEM_BYTES = {"block": 128 * 128 * 4, "vector": 128 * 4,
+                      "scalar": 4}
+KERNEL_LAUNCH_COST = 1e5  # bytes-equivalent of one kernel launch
+
+
+@dataclass(frozen=True)
+class Selected:
+    snapshot_index: int
+    graph: Graph
+    dims: Dict[str, int]
+    cost: float
+    costs: Tuple[float, ...]  # per snapshot, for inspection
+
+
+def snapshot_cost(g: Graph, dims: Dict[str, int],
+                  item_bytes: Optional[Dict[str, int]] = None) -> float:
+    item_bytes = item_bytes or DEFAULT_ITEM_BYTES
+    t = C.traffic(g, dims)
+    return t.bytes_moved(item_bytes) + KERNEL_LAUNCH_COST * t.launches
+
+
+def select(g: Graph, dims: Dict[str, int],
+           item_bytes: Optional[Dict[str, int]] = None,
+           snapshots: Optional[List[Graph]] = None) -> Selected:
+    """Fuse (if needed) and pick the cheapest snapshot for fixed dims."""
+    snaps = snapshots if snapshots is not None else fuse(g)
+    costs = tuple(snapshot_cost(s, dims, item_bytes) for s in snaps)
+    i = min(range(len(costs)), key=costs.__getitem__)
+    return Selected(i, snaps[i], dict(dims), costs[i], costs)
+
+
+def autotune(g: Graph, dim_candidates: Dict[str, Sequence[int]],
+             item_bytes: Optional[Dict[str, int]] = None) -> Selected:
+    """Sweep block-count assignments (the paper's block-shape choice) and
+    return the globally cheapest (dims, snapshot).  The fusion algorithm is
+    invoked ONCE — its choices don't depend on block shapes (paper §1)."""
+    snaps = fuse(g)
+    best: Optional[Selected] = None
+    names = sorted(dim_candidates)
+    for combo in itertools.product(*(dim_candidates[n] for n in names)):
+        dims = dict(zip(names, combo))
+        sel = select(g, dims, item_bytes, snapshots=snaps)
+        if best is None or sel.cost < best.cost:
+            best = sel
+    assert best is not None
+    return best

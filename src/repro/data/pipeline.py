@@ -1,0 +1,50 @@
+"""Deterministic, restart-safe synthetic LM data pipeline.
+
+Batches are a pure function of (seed, step): after a failure/restart the
+pipeline replays exactly, which is what makes checkpoint-resume bitwise
+reproducible (tested in test_train_integration.py).  Tokens follow a
+skewed (zipf-ish) distribution with short-range structure so the loss
+actually decreases — good enough to validate optimization end to end.
+
+On a multi-host pod each process feeds its addressable shard of the batch
+(``host_slice``); under single-process SPMD (this container and the
+dry-run) the full batch is produced and jit moves shards to devices.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class SyntheticLMData:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+
+    def batch(self, step: int) -> Dict[str, jax.Array]:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step]))
+        b, s = self.global_batch, self.seq_len
+        # zipf-ish marginals + markov-ish structure: next token depends on
+        # previous token half the time
+        base = rng.zipf(1.5, size=(b, s + 1)) % self.vocab
+        prev = np.roll(base, 1, axis=1)
+        mix = rng.random((b, s + 1)) < 0.5
+        toks = np.where(mix, (prev * 7 + 3) % self.vocab, base)
+        toks = toks.astype(np.int32)
+        return {"tokens": jnp.asarray(toks[:, :-1]),
+                "labels": jnp.asarray(toks[:, 1:])}
+
+    def host_slice(self, step: int, process_index: int,
+                   process_count: int) -> Dict[str, jax.Array]:
+        full = self.batch(step)
+        per = self.global_batch // process_count
+        sl = slice(process_index * per, (process_index + 1) * per)
+        return {k: v[sl] for k, v in full.items()}

@@ -1,0 +1,127 @@
+"""Pallas TPU kernel: fused attention (paper Example 1 + Appendix).
+
+This is the kernel the fusion algorithm *derives* (tests assert the derived
+block program has exactly this loop structure), hand-written with TPU
+BlockSpec tiling:
+
+  grid = (batch*heads, Sq/block_q, Skv/block_kv)
+  the trailing grid dim is the serial N-map of the paper's final listing;
+  the two accumulators (softmax denominator and P@V) live in VMEM scratch,
+  carried across grid steps with the running-max rescaling of the appendix
+  (significand-exponent pairs with a row-wise shared exponent).
+
+GQA is handled in the k/v index maps (a q-head group reads its kv head).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, q_offset: int, block_q: int,
+                  block_kv: int, n_kv: int, kv_len: Optional[int]):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)          # (bq, dh)
+    k = k_ref[0].astype(jnp.float32)          # (bkv, dh)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    cols = ki * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 1)
+    if causal:
+        qi = pl.program_id(1)
+        rows = q_offset + qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 0)
+        s = jnp.where(rows >= cols, s, NEG_INF)
+    if kv_len is not None:
+        s = jnp.where(cols < kv_len, s, NEG_INF)
+
+    m_prev = m_ref[...]                        # (bq, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)            # rescale: e^{t_old - z}
+    p = jnp.exp(s - m_new)                     # significand block
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    v = v_ref[0].astype(jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _done():
+        o_ref[0, ...] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           scale: Optional[float] = None,
+                           causal: bool = False, q_offset: int = 0,
+                           block_q: int = 128, block_kv: int = 128,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B, Hq, Sq, Dh); k, v: (B, Hkv, Skv, Dh).  Returns (B, Hq, Sq, Dh).
+
+    Sq and Skv are padded to the block sizes; Dh is used whole (VMEM lane
+    dim; pad to a multiple of 128 upstream for peak MXU utilization)."""
+    b, hq, sq, dh = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / (dh ** 0.5)
+
+    block_q = min(block_q, max(sq, 8))
+    block_kv = min(block_kv, max(skv, 8))
+    pad_q = (-sq) % block_q
+    pad_kv = (-skv) % block_kv
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0))) if pad_q else q
+    if pad_kv:
+        # pad keys so padded columns are masked out by a large negative score
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+    sq_p, skv_p = sq + pad_q, skv + pad_kv
+
+    qf = qp.reshape(b * hq, sq_p, dh)
+    kf = k.reshape(b * hkv, skv_p, dh)
+    vf = v.reshape(b * hkv, skv_p, dh)
+    n_q = sq_p // block_q
+    n_kv = skv_p // block_kv
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, q_offset=q_offset,
+        block_q=block_q, block_kv=block_kv, n_kv=n_kv,
+        kv_len=skv if pad_kv else None)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * hq, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, block_kv, dh),
+                         lambda h, i, j, g=group: (h // g, j, 0)),
+            pl.BlockSpec((1, block_kv, dh),
+                         lambda h, i, j, g=group: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq_p, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, dh), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    out = out.reshape(b, hq, sq_p, dh)
+    return out[:, :, :sq, :]

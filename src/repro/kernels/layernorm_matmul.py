@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: Flash-LayerNorm+Matmul (paper Example 2).
+
+Realizes the paper's fully-fused final listing on TPU:
+
+  forall m: forall n: for k:
+      s1 += row_sum(x); s2 += row_sum(x*x)       # LayerNorm row stats
+      ys += colsum(gamma*y); yb += beta @ y       # linearity corrections
+      acc += (x*gamma) @ y                        # the matmul
+    z = (acc - outer(mu, ys)) * invstd + yb       # epilogue
+
+(the affine gamma/beta extension folds into the same single pass via the
+same linearity identities the paper's Rules 4/5 exploit:
+LN(x)@Y = ((x - mu) / sigma * gamma + beta) @ Y
+        = ((x*gamma)@Y - mu * colsum(gamma*Y)) / sigma + beta@Y).
+
+One HBM pass over X and Y per output tile; the K grid dim is the serial
+K-map of the paper's listing with 4 VMEM accumulators.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ln_mm_kernel(x_ref, y_ref, g_ref, b_ref, z_ref,
+                  acc_ref, s1_ref, s2_ref, ys_ref, yb_ref, *,
+                  eps: float, k_dim: int, n_k: int, block_k: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        s1_ref[...] = jnp.zeros_like(s1_ref)
+        s2_ref[...] = jnp.zeros_like(s2_ref)
+        ys_ref[...] = jnp.zeros_like(ys_ref)
+        yb_ref[...] = jnp.zeros_like(yb_ref)
+
+    x = x_ref[...].astype(jnp.float32)           # (bm, bk)
+    y = y_ref[...].astype(jnp.float32)           # (bk, bn)
+    gamma = g_ref[...].astype(jnp.float32)       # (1, bk)
+    beta = b_ref[...].astype(jnp.float32)        # (1, bk)
+
+    s1_ref[...] += x.sum(axis=1, keepdims=True)
+    s2_ref[...] += (x * x).sum(axis=1, keepdims=True)
+    yg = y * gamma.T                             # gamma * Y rows
+    ys_ref[...] += yg.sum(axis=0, keepdims=True)
+    yb_ref[...] += jax.lax.dot(beta, y, preferred_element_type=jnp.float32)
+    acc_ref[...] += jax.lax.dot(x, yg, preferred_element_type=jnp.float32)
+
+    @pl.when(ki == n_k - 1)
+    def _done():
+        mu = s1_ref[...] / k_dim                     # (bm, 1)
+        var = s2_ref[...] / k_dim - mu * mu
+        istd = jax.lax.rsqrt(var + eps)
+        z = (acc_ref[...] - mu * ys_ref[...]) * istd + yb_ref[...]
+        z_ref[...] = z.astype(z_ref.dtype)
+
+
+def layernorm_matmul_pallas(x: jax.Array, y: jax.Array, gamma: jax.Array,
+                            beta: jax.Array, *, eps: float = 1e-5,
+                            block_m: int = 128, block_n: int = 128,
+                            block_k: int = 512,
+                            interpret: bool = False) -> jax.Array:
+    """x: (M, K); y: (K, N); gamma, beta: (K,).  Returns LN(x)@y: (M, N).
+
+    K must be divisible by block_k (the row statistics must cover the whole
+    row; callers pick block_k | K — model dims are powers of two)."""
+    m_dim, k_dim = x.shape
+    _, n_dim = y.shape
+    block_m = min(block_m, m_dim)
+    block_n = min(block_n, n_dim)
+    block_k = min(block_k, k_dim)
+    assert k_dim % block_k == 0, "row stats need full-row coverage"
+    pad_m = (-m_dim) % block_m
+    pad_n = (-n_dim) % block_n
+    if pad_m:
+        x = jnp.pad(x, ((0, pad_m), (0, 0)))
+    if pad_n:
+        y = jnp.pad(y, ((0, 0), (0, pad_n)))
+    mp, np_ = m_dim + pad_m, n_dim + pad_n
+    g2 = gamma.reshape(1, k_dim)
+    b2 = beta.reshape(1, k_dim)
+    n_k = k_dim // block_k
+
+    kernel = functools.partial(_ln_mm_kernel, eps=eps, k_dim=k_dim, n_k=n_k,
+                               block_k=block_k)
+    out = pl.pallas_call(
+        kernel,
+        grid=(mp // block_m, np_ // block_n, n_k),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, block_k), lambda i, j, k: (0, k)),
+            pl.BlockSpec((1, block_k), lambda i, j, k: (0, k)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_m, block_n), jnp.float32),
+            pltpu.VMEM((block_m, 1), jnp.float32),
+            pltpu.VMEM((block_m, 1), jnp.float32),
+            pltpu.VMEM((1, block_n), jnp.float32),
+            pltpu.VMEM((1, block_n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, y, g2, b2)
+    return out[:m_dim, :n_dim]

@@ -1,0 +1,116 @@
+"""Public fused-kernel API with implementation dispatch + training support.
+
+``impl``:
+  * ``"pallas"``    — the TPU kernel (real hardware).
+  * ``"interpret"`` — the same kernel body executed by the Pallas
+                      interpreter on CPU (correctness validation).
+  * ``"ref"``       — the pure-jnp oracle (also the lowering used by the
+                      multi-pod dry-run on CPU host devices: XLA sees the
+                      same HLO-level math the kernel fuses on TPU).
+  * ``None``        — auto: pallas on TPU backends, ref elsewhere.
+
+All three entry points are differentiable: forward runs the fused
+implementation, backward is the VJP of the reference (recompute — the
+standard Flash-Attention-style backward strategy).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as R
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.layernorm_matmul import layernorm_matmul_pallas
+from repro.kernels.rmsnorm_swiglu import rmsnorm_swiglu_pallas
+
+
+def default_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _with_ref_vjp(fused_fn, ref_fn):
+    @jax.custom_vjp
+    def f(*args):
+        return fused_fn(*args)
+
+    def fwd(*args):
+        return fused_fn(*args), args
+
+    def bwd(args, ct):
+        _, vjp = jax.vjp(ref_fn, *args)
+        return vjp(ct)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (paper Example 1)
+# ---------------------------------------------------------------------------
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    scale: Optional[float] = None, causal: bool = False,
+                    q_offset: int = 0, impl: Optional[str] = None,
+                    block_q: int = 128, block_kv: int = 512,
+                    unroll: bool = False, p_half: bool = False) -> jax.Array:
+    impl = impl or default_impl()
+    ref_fn = functools.partial(R.attention_ref, scale=scale, causal=causal,
+                               q_offset=q_offset)
+    if impl == "ref":
+        fused = ref_fn
+    elif impl == "xla":
+        # flash semantics in pure XLA (scan over KV chunks); the scalable
+        # non-Pallas lowering used by the dry-run and CPU training
+        fused = functools.partial(R.attention_xla_flash, scale=scale,
+                                  causal=causal, q_offset=q_offset,
+                                  block_kv=block_kv, unroll=unroll,
+                                  p_half=p_half)
+    else:
+        fused = functools.partial(
+            flash_attention_pallas, scale=scale, causal=causal,
+            q_offset=q_offset, block_q=block_q, block_kv=block_kv,
+            interpret=(impl == "interpret"))
+    return _with_ref_vjp(fused, ref_fn)(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Flash-LayerNorm+Matmul (paper Example 2)
+# ---------------------------------------------------------------------------
+
+def layernorm_matmul(x: jax.Array, y: jax.Array, gamma: jax.Array,
+                     beta: jax.Array, *, eps: float = 1e-5,
+                     impl: Optional[str] = None, block_m: int = 128,
+                     block_n: int = 128, block_k: int = 512) -> jax.Array:
+    impl = impl or default_impl()
+    ref_fn = functools.partial(R.layernorm_matmul_ref, eps=eps)
+    if impl == "ref":
+        fused = ref_fn
+    else:
+        fused = functools.partial(
+            layernorm_matmul_pallas, eps=eps, block_m=block_m,
+            block_n=block_n, block_k=block_k,
+            interpret=(impl == "interpret"))
+    return _with_ref_vjp(fused, ref_fn)(x, y, gamma, beta)
+
+
+# ---------------------------------------------------------------------------
+# Flash-RMSNorm+FFN-SwiGLU (paper Example 3)
+# ---------------------------------------------------------------------------
+
+def rmsnorm_swiglu(x: jax.Array, w: jax.Array, v: jax.Array, u: jax.Array,
+                   gamma: jax.Array, *, eps: float = 1e-6,
+                   impl: Optional[str] = None, block_m: int = 128,
+                   block_k: int = 512) -> jax.Array:
+    impl = impl or default_impl()
+    ref_fn = functools.partial(R.rmsnorm_swiglu_ref, eps=eps)
+    if impl == "ref":
+        fused = ref_fn
+    else:
+        fused = functools.partial(
+            rmsnorm_swiglu_pallas, eps=eps, block_m=block_m,
+            block_k=block_k, interpret=(impl == "interpret"))
+    return _with_ref_vjp(fused, ref_fn)(x, w, v, u, gamma)

@@ -1,0 +1,150 @@
+"""Pure-jnp oracles for every fused kernel.
+
+These are the *unfused* semantics (what the paper's array programs compute)
+written directly in jnp.  Kernel tests sweep shapes/dtypes and
+assert_allclose against these; they are also the default implementation on
+backends without Pallas TPU support (this CPU container, and the multi-pod
+dry-run, which lowers the jnp path to XLA HLO).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  scale: Optional[float] = None, causal: bool = False,
+                  q_offset: int = 0) -> jax.Array:
+    """Multi-head attention with GQA.
+
+    q: (B, Hq, Sq, Dh); k, v: (B, Hkv, Skv, Dh); Hq % Hkv == 0.
+    Softmax in f32 with max subtraction (the appendix's safety, unfused).
+    """
+    b, hq, sq, dh = q.shape
+    hkv = k.shape[1]
+    dv = v.shape[-1]
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / (dh ** 0.5)
+    qf = q.astype(jnp.float32).reshape(b, hkv, group, sq, dh)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) * scale
+    if causal:
+        skv = k.shape[2]
+        rows = q_offset + jnp.arange(sq)[:, None]
+        cols = jnp.arange(skv)[None, :]
+        s = jnp.where(rows >= cols, s, -1e30)
+    m = jax.lax.stop_gradient(jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return o.reshape(b, hq, sq, dv).astype(q.dtype)
+
+
+def attention_xla_flash(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        scale: Optional[float] = None, causal: bool = False,
+                        q_offset: int = 0, block_kv: int = 512,
+                        unroll: bool = False,
+                        p_half: bool = False) -> jax.Array:
+    """Flash-attention semantics expressed in pure XLA (lax.scan over KV
+    chunks with the appendix's running-max carry).
+
+    This is the lowering used at scale on backends without Pallas (and by
+    the multi-pod dry-run): memory stays O(Sq * Dh + block_kv * Dh) instead
+    of O(Sq * Skv), so compiled memory/cost analysis reflects the fused
+    kernel rather than the naive quadratic program.
+    """
+    b, hq, sq, dh = q.shape
+    _, hkv, skv, _ = k.shape
+    dv = v.shape[-1]
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / (dh ** 0.5)
+    block_kv = min(block_kv, skv)
+    pad = (-skv) % block_kv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    n_blocks = (skv + pad) // block_kv
+    # keep operands in the model dtype; accumulate in f32 on the MXU.
+    # GQA: broadcast kv heads up to the full query-head count instead of
+    # folding the group into the sequence dim — the (b,hkv,g*sq,d) reshape
+    # crosses the tensor-sharded head axis and forces GSPMD into
+    # "involuntary full rematerialization" (observed on the 256-chip mesh).
+    qf = q
+    if group > 1:
+        k = jnp.repeat(k, group, axis=1)
+        v = jnp.repeat(v, group, axis=1)
+    kb = jnp.moveaxis(k.reshape(b, hq, n_blocks, block_kv, dh), 2, 0)
+    vb = jnp.moveaxis(v.reshape(b, hq, n_blocks, block_kv, dv), 2, 0)
+
+    rows = (q_offset + jnp.arange(sq))[None, None, :, None]
+
+    def step(carry, blk):
+        m_prev, l_prev, acc = carry
+        kc, vc, idx = blk
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kc,
+                       preferred_element_type=jnp.float32) * scale
+        cols = idx * block_kv + jnp.arange(block_kv)[None, None, None, :]
+        mask = cols < skv
+        if causal:
+            mask = mask & (rows >= cols)
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = l_prev * alpha + p.sum(-1, keepdims=True)
+        if p_half:
+            # half-precision probabilities for the PV dot (what the Pallas
+            # kernel feeds the MXU); f32 accumulator
+            p = p.astype(q.dtype)
+        acc = acc * alpha + jnp.einsum("bhqk,bhkd->bhqd", p, vc,
+                                       preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc), None
+
+    init = (jnp.full((b, hq, sq, 1), -1e30, jnp.float32),
+            jnp.zeros((b, hq, sq, 1), jnp.float32),
+            jnp.zeros((b, hq, sq, dv), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(step, init,
+                                  (kb, vb, jnp.arange(n_blocks)),
+                                  unroll=n_blocks if unroll else 1)
+    return (acc / l).astype(q.dtype)
+
+
+def layernorm_ref(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+                  eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = xf.var(axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * gamma + beta).astype(x.dtype)
+
+
+def layernorm_matmul_ref(x: jax.Array, y: jax.Array, gamma: jax.Array,
+                         beta: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """Paper Example 2 (with the affine extension): LayerNorm_rows(X) @ Y."""
+    ln = layernorm_ref(x, gamma, beta, eps).astype(jnp.float32)
+    return (ln @ y.astype(jnp.float32)).astype(x.dtype)
+
+
+def rmsnorm_ref(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    irms = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * irms * gamma).astype(x.dtype)
+
+
+def swish(x: jax.Array) -> jax.Array:
+    return x * jax.nn.sigmoid(x)
+
+
+def rmsnorm_swiglu_ref(x: jax.Array, w: jax.Array, v: jax.Array,
+                       u: jax.Array, gamma: jax.Array,
+                       eps: float = 1e-6) -> jax.Array:
+    """Paper Example 3: O = (Swish(RMS(X)@W) * (RMS(X)@V)) @ U."""
+    xn = rmsnorm_ref(x, gamma, eps).astype(jnp.float32)
+    g = swish(xn @ w.astype(jnp.float32))
+    h = g * (xn @ v.astype(jnp.float32))
+    return (h @ u.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,275 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell against the production mesh and record memory/cost analysis +
+roofline terms.
+
+MUST be invoked as its own process (the two lines above run before any
+other import — jax locks the device count on first init):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun.json
+"""
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import (ARCHS, SHAPES, all_cells, cell_supported,  # noqa: E402
+                           get_config)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import make_step  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.runtime import sharding as SH  # noqa: E402
+from repro.runtime.hlo_analysis import (Roofline, model_flops,  # noqa: E402
+                                        roofline_from_compiled)
+
+
+def active_params(cfg) -> float:
+    """Parameter count active per token (MoE: top-k + shared only)."""
+    import numpy as np
+    model = build_model(cfg)
+    shapes = jax.eval_shape(lambda k: model.init_params(k)[0],
+                            jax.random.key(0))
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        keys = [getattr(k, "key", getattr(k, "idx", "")) for k in path]
+        n = int(np.prod(leaf.shape))
+        if any(str(k).startswith("we_") for k in keys) and cfg.n_experts:
+            n = int(n * cfg.top_k / cfg.n_experts)
+        total += n
+    return float(total)
+
+
+def layer_knobs(cfg):
+    """Per-family layer-count knobs: (name, full_count, with_counts)."""
+    import dataclasses as dc
+    if cfg.family in ("dense", "vlm", "ssm"):
+        return ([("layers", cfg.n_layers)],
+                lambda c: dc.replace(cfg, n_layers=c["layers"]))
+    if cfg.family == "moe":
+        knobs = []
+        if cfg.n_dense_layers:
+            knobs.append(("dense", cfg.n_dense_layers))
+        knobs.append(("moe", cfg.n_layers - cfg.n_dense_layers))
+
+        def wc(c):
+            nd = c.get("dense", 0)
+            return dc.replace(cfg, n_dense_layers=nd,
+                              n_layers=nd + c["moe"])
+        return knobs, wc
+    if cfg.family == "hybrid":
+        return ([("blocks", cfg.n_layers // cfg.attn_period)],
+                lambda c: dc.replace(cfg,
+                                     n_layers=c["blocks"] * cfg.attn_period))
+    if cfg.family == "encdec":
+        return ([("enc", cfg.n_enc_layers), ("dec", cfg.n_layers)],
+                lambda c: dc.replace(cfg, n_enc_layers=c["enc"],
+                                     n_layers=c["dec"]))
+    raise ValueError(cfg.family)
+
+
+def _measure(cfg, shape, mesh, rules=None, out_shardings=False):
+    """Lower+compile one config (scans unrolled) -> roofline raw terms."""
+    import dataclasses as dc
+    cfg = dc.replace(cfg, unroll_scans=True)
+    with SH.use_mesh(mesh, rules=rules):
+        step, args, shardings_fn = make_step(cfg, shape)
+        in_sh = shardings_fn(mesh)
+        kw = {}
+        if out_shardings and shape.kind == "train":
+            # pin result shardings to the input shardings (params/opt) and
+            # donate the old state: lets XLA keep grads reduce-scattered
+            kw["out_shardings"] = (in_sh[0], in_sh[1], None)
+            kw["donate_argnums"] = (0, 1)
+        jitted = jax.jit(step, in_shardings=in_sh, **kw)
+        compiled = jitted.lower(*args).compile()
+        return roofline_from_compiled(compiled)
+
+
+def extrapolated_roofline(cfg, shape, mesh, rules=None,
+                          out_shardings=False) -> Roofline:
+    """cost_analysis counts each while-loop body once, so scanned layer
+    stacks are undercounted.  We unroll the in-layer scans, compile with
+    every stage count at 1 and at 2, and extrapolate linearly to the full
+    depth (flops/bytes/collectives are exactly linear in stage counts)."""
+    knobs, with_counts = layer_knobs(cfg)
+    ones = {k: 1 for k, _ in knobs}
+    base = _measure(with_counts(ones), shape, mesh, rules, out_shardings)
+    flops, hbm = base.flops, base.hbm_bytes
+    coll = dict(base.coll_bytes)
+    for name, full in knobs:
+        two = dict(ones)
+        two[name] = 2
+        m2 = _measure(with_counts(two), shape, mesh, rules, out_shardings)
+        flops += (full - 1) * (m2.flops - base.flops)
+        hbm += (full - 1) * (m2.hbm_bytes - base.hbm_bytes)
+        for k in set(m2.coll_bytes) | set(base.coll_bytes):
+            d = m2.coll_bytes.get(k, 0.0) - base.coll_bytes.get(k, 0.0)
+            coll[k] = coll.get(k, 0.0) + (full - 1) * d
+    return Roofline(flops=flops, hbm_bytes=hbm, coll_bytes=coll)
+
+
+def attention_intermediate_bytes(cfg, shape) -> float:
+    """Bytes of materialized attention score/probability intermediates in
+    the XLA lowering, PER CHIP.  The Pallas kernel keeps these in VMEM on
+    TPU, so the kernel-adjusted memory term subtracts them (convention:
+    write+read once forward; x3 for train to cover the remat recompute and
+    backward reads)."""
+    if cfg.family == "ssm":
+        return 0.0
+    b, s = shape.global_batch, shape.seq_len
+    sq = 1 if shape.kind == "decode" else s
+    n_attn = cfg.n_layers
+    if cfg.family == "hybrid":
+        n_attn = cfg.n_layers // cfg.attn_period
+    if cfg.family == "encdec":
+        n_attn = cfg.n_layers * 2 + cfg.n_enc_layers  # self+cross+enc
+    p_elems = b * cfg.n_heads * sq * s
+    passes = 2.0 if shape.kind != "train" else 6.0
+    return n_attn * p_elems * 4.0 * passes / 256  # per chip (data+tensor)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True, roofline: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = cell_supported(arch, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    # 1) the runnability proof: full config, compact (scanned) HLO
+    with SH.use_mesh(mesh):
+        step, args, shardings_fn = make_step(cfg, shape)
+        in_shardings = shardings_fn(mesh)
+        jitted = jax.jit(step, in_shardings=in_shardings)
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+    full_compile_s = round(time.time() - t0, 1)
+
+    n_chips = mesh.devices.size
+    if not roofline:
+        result = {"arch": arch, "shape": shape_name,
+                  "mesh": "multi" if multi_pod else "single",
+                  "status": "ok", "n_chips": n_chips,
+                  "compile_s": full_compile_s}
+        if mem is not None:
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes"):
+                v = getattr(mem, k, None)
+                if v is not None:
+                    result[k] = int(v)
+        if verbose:
+            print(json.dumps(result, default=str))
+            print(f"--- memory_analysis({arch}/{shape_name}):", mem)
+        return result
+
+    # 2) roofline terms: stage-count extrapolation with unrolled scans
+    t0 = time.time()
+    roof = extrapolated_roofline(cfg, shape, mesh)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mf = model_flops(active_params(cfg), tokens,
+                     "train" if shape.kind == "train" else "serve")
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok",
+        "n_chips": n_chips,
+        "compile_s": full_compile_s,
+        "roofline_compile_s": round(time.time() - t0, 1),
+        "flops_per_chip": roof.flops,
+        "hbm_bytes_per_chip": roof.hbm_bytes,
+        "coll_bytes_per_chip": roof.coll_bytes,
+        "t_compute_s": roof.t_compute,
+        "t_memory_s": roof.t_memory,
+        "t_collective_s": roof.t_collective,
+        "bottleneck": roof.bottleneck,
+        "model_flops_global": mf,
+        "model_flops_per_chip": mf / n_chips,
+        "useful_flops_ratio": (mf / n_chips) / roof.flops
+        if roof.flops else 0.0,
+        "roofline_fraction": roof.fraction_of_roofline(mf / n_chips),
+    }
+    adj = attention_intermediate_bytes(cfg, shape)
+    from repro.runtime.hlo_analysis import HBM_BW
+    result["hbm_bytes_kernel_adj"] = max(roof.hbm_bytes - adj, 0.0)
+    result["t_memory_kernel_adj_s"] = result["hbm_bytes_kernel_adj"] / HBM_BW
+    if mem is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                result[k] = int(v)
+        peak = (result.get("argument_size_in_bytes", 0)
+                + result.get("temp_size_in_bytes", 0))
+        result["fits_16g_hbm"] = bool(peak < 16e9)
+    if verbose:
+        print(json.dumps(result, indent=None, default=str))
+        print(f"--- memory_analysis({arch}/{shape_name}):", mem)
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        brief = {k: v for k, v in sorted(ca.items())
+                 if k in ("flops", "bytes accessed", "optimal_seconds")}
+        print(f"--- cost_analysis({arch}/{shape_name}):", brief)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=sorted(ARCHS))
+    ap.add_argument("--shape", default=None, choices=sorted(SHAPES))
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) cell")
+    ap.add_argument("--out", default=None, help="write results JSON here")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    if args.all:
+        cells = all_cells()
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    results = []
+    failed = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch} x {shape} x {'multi' if mp else 'single'}"
+            print(f"=== dry-run {tag}", flush=True)
+            try:
+                results.append(run_cell(arch, shape, mp,
+                                        roofline=not mp))
+            except Exception as e:  # noqa: BLE001
+                failed += 1
+                traceback.print_exc()
+                results.append({"arch": arch, "shape": shape,
+                                "mesh": "multi" if mp else "single",
+                                "status": "failed", "error": repr(e)})
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=2, default=str)
+    print(f"=== done: {sum(r['status'] == 'ok' for r in results)} ok, "
+          f"{sum(r['status'] == 'skipped' for r in results)} skipped, "
+          f"{failed} failed")
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

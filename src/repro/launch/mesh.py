@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (required so smoke tests / benches see one CPU
+device while the dry-run forces 512 host devices)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for the production mesh, have "
+            f"{len(jax.devices())}; run via launch/dryrun.py which forces "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512")
+    return jax.sharding.Mesh(
+        __import__("numpy").asarray(devices).reshape(shape), axes)
+
+
+def make_debug_mesh(shape=(1, 1), axes=("data", "model")):
+    """A mesh over however many devices exist (tests on 1-8 CPU devices)."""
+    import numpy as np
+    n = math.prod(shape)
+    return jax.sharding.Mesh(
+        np.asarray(jax.devices()[:n]).reshape(shape), axes)

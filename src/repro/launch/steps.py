@@ -1,0 +1,212 @@
+"""Step functions + abstract input specs for every (arch x shape) cell.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input (weak-type-correct, shardable, no device allocation) — the
+dry-run lowers against these.  ``train_4k``/``prefill_32k`` lower
+``train_step``/``prefill_step``; ``decode_*``/``long_*`` lower
+``serve_step`` (one new token against a seq_len cache)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeSpec
+from repro.models import build_model
+from repro.models.common import ModelConfig
+from repro.optim import AdamW, cosine_schedule
+from repro.runtime.sharding import logical_to_spec, tree_shardings
+
+
+def default_optimizer(total_steps: int = 10000) -> AdamW:
+    return AdamW(lr=cosine_schedule(3e-4, 200, total_steps))
+
+
+def sanitize_shardings(shardings, abstract, mesh):
+    """Drop mesh axes that don't evenly divide an argument dimension
+    (explicit jit arg shardings require divisibility — e.g. 8 KV heads on a
+    16-way model axis, or batch=1 long-context decode on the data axis).
+    Inner with_sharding_constraints may still shard unevenly (GSPMD pads).
+    """
+    import math
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def fix(sh, ab):
+        if sh is None or not hasattr(ab, "shape"):
+            return sh
+        spec = list(sh.spec) + [None] * (len(ab.shape) - len(sh.spec))
+        new = []
+        for i, ax in enumerate(spec):
+            if ax is None:
+                new.append(None)
+                continue
+            axes = list(ax) if isinstance(ax, tuple) else [ax]
+            while axes:
+                size = math.prod(mesh.shape[a] for a in axes)
+                if ab.shape[i] % size == 0:
+                    break
+                axes.pop()
+            if not axes:
+                new.append(None)
+            elif len(axes) == 1:
+                new.append(axes[0])
+            else:
+                new.append(tuple(axes))
+        while new and new[-1] is None:
+            new.pop()
+        return NamedSharding(mesh, P(*new))
+
+    return jax.tree.map(fix, shardings, abstract)
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Abstract model inputs for one cell (kind-dependent)."""
+    b, s = shape.global_batch, shape.seq_len
+    extras: Dict[str, Any] = {}
+    if cfg.family == "vlm":
+        extras["vision_embeds"] = _sds((b, cfg.n_vision_tokens, cfg.d_model),
+                                       cfg.dtype)
+    if cfg.family == "encdec":
+        extras["frames"] = _sds((b, cfg.enc_seq, cfg.d_model), cfg.dtype)
+
+    if shape.kind == "train":
+        return {"tokens": _sds((b, s), jnp.int32),
+                "labels": _sds((b, s), jnp.int32), **extras}
+    if shape.kind == "prefill":
+        return {"tokens": _sds((b, s), jnp.int32), **extras}
+    if shape.kind == "decode":
+        model = build_model(cfg)
+        cache = jax.eval_shape(lambda: model.init_cache(b, s))
+        return {"tokens": _sds((b, 1), jnp.int32),
+                "pos": _sds((), jnp.int32),
+                "cache": cache}
+    raise ValueError(shape.kind)
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                    model: Any) -> Dict[str, Any]:
+    """NamedShardings matching input_specs' structure."""
+    from jax.sharding import NamedSharding
+
+    def ns(axes):
+        return NamedSharding(mesh, logical_to_spec(axes, mesh))
+
+    extras = {}
+    if cfg.family == "vlm":
+        extras["vision_embeds"] = ns(("batch", None, None))
+    if cfg.family == "encdec":
+        extras["frames"] = ns(("batch", None, None))
+    if shape.kind == "train":
+        return {"tokens": ns(("batch", None)), "labels": ns(("batch", None)),
+                **extras}
+    if shape.kind == "prefill":
+        return {"tokens": ns(("batch", None)), **extras}
+    cache_specs = model.cache_specs()
+    return {"tokens": ns(("batch", None)), "pos": ns(()),
+            "cache": tree_shardings(cache_specs, mesh)}
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(model, optimizer: AdamW):
+    def train_step(params, opt_state, batch):
+        kw = {k: v for k, v in batch.items()
+              if k not in ("tokens", "labels")}
+        loss, grads = jax.value_and_grad(model.loss)(
+            params, batch["tokens"], batch["labels"], **kw)
+        params, opt_state, metrics = optimizer.update(grads, opt_state,
+                                                      params)
+        return params, opt_state, {"loss": loss, **metrics}
+    return train_step
+
+
+def make_prefill_step(model):
+    def prefill_step(params, batch):
+        kw = {k: v for k, v in batch.items() if k != "tokens"}
+        logits, cache = model.prefill(params, batch["tokens"], **kw)
+        return logits[:, -1], cache
+    return prefill_step
+
+
+def make_serve_step(model):
+    def serve_step(params, batch):
+        logits, cache = model.decode_step(params, batch["cache"],
+                                          batch["tokens"], batch["pos"])
+        next_token = jnp.argmax(logits[:, -1], axis=-1)
+        return next_token, cache
+    return serve_step
+
+
+def make_step(cfg: ModelConfig, shape: ShapeSpec, model=None,
+              optimizer: Optional[AdamW] = None):
+    """Returns (step_fn, abstract_args, arg_shardings_builder).
+
+    abstract_args is a tuple matching step_fn's signature; the shardings
+    builder takes a mesh and returns matching NamedShardings."""
+    model = model or build_model(cfg)
+    specs = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        optimizer = optimizer or default_optimizer()
+        step = make_train_step(model, optimizer)
+        params_s = jax.eval_shape(lambda k: model.init_params(k)[0],
+                                  jax.random.key(0))
+        param_specs = _abstract_param_specs(model)
+        opt_s = jax.eval_shape(optimizer.init, params_s)
+        opt_specs = optimizer.state_specs(param_specs)
+        args = (params_s, opt_s, specs)
+
+        def shardings(mesh):
+            raw = (tree_shardings(param_specs, mesh),
+                   tree_shardings(opt_specs, mesh),
+                   batch_shardings(cfg, shape, mesh, model))
+            return sanitize_shardings(raw, args, mesh)
+        return step, args, shardings
+
+    if shape.kind == "prefill":
+        step = make_prefill_step(model)
+    else:
+        step = make_serve_step(model)
+    params_s = jax.eval_shape(lambda k: model.init_params(k)[0],
+                              jax.random.key(0))
+    param_specs = _abstract_param_specs(model)
+    args = (params_s, specs)
+
+    def shardings(mesh):
+        raw = (tree_shardings(param_specs, mesh),
+               batch_shardings(cfg, shape, mesh, model))
+        return sanitize_shardings(raw, args, mesh)
+    return step, args, shardings
+
+
+def _abstract_param_specs(model):
+    """The logical-axis spec tree (pure structure; no allocation)."""
+    import numpy as np
+
+    class _Capture:
+        specs = None
+
+    # init_params is pure; evaluate abstractly and capture the spec tree by
+    # running the builder under eval_shape, returning specs via closure.
+    out = {}
+
+    def f(k):
+        p, s = model.init_params(k)
+        out["specs"] = s
+        return p
+
+    jax.eval_shape(f, jax.random.key(0))
+    return out["specs"]

@@ -1,0 +1,249 @@
+"""Model configuration + shared layers for the 10-architecture zoo.
+
+Pure-JAX functional style: parameters are nested dicts of arrays; every
+parameter tree has a parallel *spec tree* of logical sharding axes
+(see ``runtime/sharding.py``).  Layer stacks are stored with a leading
+layer dim and consumed with ``jax.lax.scan`` so the HLO stays compact for
+the 61-72-layer assigned architectures.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.sharding import constrain
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"       # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_head: int = 64
+    d_ff: int = 1024
+    vocab: int = 1024
+    max_seq: int = 8192
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False       # qwen2
+    qk_norm: bool = False        # qwen3
+    norm: str = "rms"            # rms | ln  (whisper uses ln)
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    n_shared_experts: int = 0
+    n_dense_layers: int = 0      # leading dense layers (deepseek: 3)
+    capacity_factor: float = 1.25
+    moe_period: int = 1          # apply MoE every k-th layer (jamba: 2)
+    # --- MLA (deepseek) ---
+    use_mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    # --- SSM (mamba2 SSD) ---
+    ssm_state: int = 128
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+    attn_period: int = 0         # hybrid: every k-th layer is attention
+                                 # (jamba: 8 -> 1 attn : 7 mamba)
+    # --- enc-dec (whisper) ---
+    n_enc_layers: int = 0
+    enc_seq: int = 1500
+    # --- vlm ---
+    n_vision_tokens: int = 0
+    # --- runtime ---
+    dtype: Any = jnp.bfloat16
+    attn_impl: str = "xla"       # xla | ref | pallas | interpret
+    mlp_impl: str = "fused_ref"  # fused_ref | pallas | interpret | unfused
+    remat: bool = True
+    remat_policy: str = "full"   # full | dots  (dots: save matmul outputs,
+                                 # no recompute of the big dots in backward)
+    unroll_scans: bool = False   # dry-run: unroll kv/ssd chunk scans so
+                                 # cost_analysis counts every iteration
+    attn_p_half: bool = False    # half-precision softmax probs for the PV
+                                 # dot (flash-kernel MXU convention)
+    moe_impl: str = "dense"      # dense | shard_map (EP dispatch path)
+    logical_batch: Tuple[str, ...] = ("batch", None, None)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def n_ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def is_attn_layer(self, i: int) -> bool:
+        if self.family not in ("ssm", "hybrid"):
+            return True
+        if self.family == "ssm":
+            return False
+        # jamba: one attention layer per attn_period block (at index p//2)
+        return i % self.attn_period == (self.attn_period // 2)
+
+    def is_moe_layer(self, i: int) -> bool:
+        if self.n_experts == 0:
+            return False
+        return i >= self.n_dense_layers and (i % self.moe_period ==
+                                             self.moe_period - 1)
+
+
+def reduced_config(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """A tiny same-family variant for CPU smoke tests."""
+    small = dict(
+        n_layers=min(cfg.n_layers, 4 if cfg.attn_period == 0
+                     else cfg.attn_period),
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads < cfg.n_heads
+        else 4,
+        d_head=32,
+        d_ff=256,
+        vocab=512,
+        max_seq=256,
+        n_experts=min(cfg.n_experts, 4),
+        top_k=min(cfg.top_k, 2),
+        capacity_factor=8.0,  # no drops at smoke-test scale (exactness)
+        moe_d_ff=64 if cfg.n_experts else 0,
+        n_shared_experts=min(cfg.n_shared_experts, 1),
+        n_dense_layers=min(cfg.n_dense_layers, 1),
+        q_lora_rank=64 if cfg.q_lora_rank else 0,
+        kv_lora_rank=32 if cfg.use_mla else 0,
+        qk_nope_dim=32 if cfg.use_mla else 0,
+        qk_rope_dim=16 if cfg.use_mla else 0,
+        v_head_dim=32 if cfg.use_mla else 0,
+        ssm_state=16,
+        ssm_head_dim=16,
+        ssm_chunk=32,
+        n_enc_layers=min(cfg.n_enc_layers, 2),
+        enc_seq=64 if cfg.n_enc_layers else 0,
+        n_vision_tokens=min(cfg.n_vision_tokens, 16),
+        dtype=jnp.float32,
+        remat=False,
+    )
+    small.update(overrides)
+    return dataclasses.replace(cfg, **small)
+
+
+# ---------------------------------------------------------------------------
+# parameter init helpers — every creator returns (array, logical_axes)
+# ---------------------------------------------------------------------------
+
+Param = Tuple[jax.Array, Tuple[Optional[str], ...]]
+
+
+class ParamBuilder:
+    def __init__(self, key: jax.Array, dtype):
+        self.key = key
+        self.dtype = dtype
+        self.params: Dict[str, Any] = {}
+        self.specs: Dict[str, Any] = {}
+
+    def _split(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def dense(self, name, shape, axes, scale=None):
+        fan_in = shape[0] if len(shape) >= 2 else 1
+        scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+        w = jax.random.normal(self._split(), shape, self.dtype) * scale
+        self.params[name] = w
+        self.specs[name] = axes
+        return w
+
+    def zeros(self, name, shape, axes):
+        self.params[name] = jnp.zeros(shape, self.dtype)
+        self.specs[name] = axes
+        return self.params[name]
+
+    def ones(self, name, shape, axes):
+        self.params[name] = jnp.ones(shape, self.dtype)
+        self.specs[name] = axes
+        return self.params[name]
+
+    def sub(self, name):
+        b = ParamBuilder(self._split(), self.dtype)
+        self.params[name] = b.params
+        self.specs[name] = b.specs
+        return b
+
+    def build(self):
+        return self.params, self.specs
+
+
+def stack_layers(trees: List[Dict]) -> Dict:
+    """Stack a list of identical param trees along a new leading layer dim."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def stack_specs(spec: Dict) -> Dict:
+    """Prepend the (replicated) layer axis to every spec tuple."""
+    return jax.tree.map(
+        lambda axes: (None,) + tuple(axes),
+        spec,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x))
+
+
+# ---------------------------------------------------------------------------
+# normalization / rope
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, gamma, eps):
+    xf = x.astype(jnp.float32)
+    irms = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * irms * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, gamma, beta, eps):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = xf.var(axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32)
+            + beta.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_frequencies(d_head: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, jnp.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, Dh) with Dh even; positions: (S,) or broadcastable."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                     # (d/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean next-token cross entropy, f32 accumulation.
+
+    The gold logit is extracted with a one-hot reduction rather than
+    ``take_along_axis`` so that vocab-sharded logits stay sharded (a gather
+    over the tensor-parallel vocab dim would force XLA to all-gather the
+    full logits — measured at +13GB/device on the 256-chip dry-run)."""
+    lf = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    onehot = jax.nn.one_hot(labels, lf.shape[-1], dtype=lf.dtype)
+    gold = jnp.sum(lf * onehot, axis=-1)
+    return (logz - gold).mean()

@@ -1,0 +1,145 @@
+"""Post-SPMD HLO analysis: collective traffic + roofline terms.
+
+``collective_bytes`` parses the *compiled* (partitioned) HLO text and sums
+the operand/result sizes of every cross-device collective.  Conventions
+(bytes that actually cross links, per device):
+
+  all-reduce         2 x size   (ring: reduce-scatter + all-gather)
+  all-gather         1 x result size
+  reduce-scatter     1 x operand size
+  all-to-all         1 x size
+  collective-permute 1 x size
+
+``cost_analysis()`` gives per-device HLO flops/bytes (the module is the
+per-partition program after GSPMD).  Roofline terms per §Roofline:
+
+  compute    = flops / peak_flops          (per chip)
+  memory     = hbm_bytes / hbm_bw          (per chip)
+  collective = coll_bytes / link_bw        (per chip link)
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+# TPU v5e hardware constants (assignment):
+PEAK_FLOPS = 197e12      # bf16 FLOP/s per chip
+HBM_BW = 819e9           # bytes/s per chip
+LINK_BW = 50e9           # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "e4m3": 1, "e5m2": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+_SCALE = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+          "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum collective traffic by op kind from partitioned HLO text."""
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        result, kind = m.group(1), m.group(2)
+        if "-done" in line:
+            continue  # async pair: count the -start only
+        size = _shape_bytes(result)
+        out[kind] = out.get(kind, 0.0) + size * _SCALE[kind]
+    return out
+
+
+@dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    coll_bytes: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def total_coll(self) -> float:
+        return sum(self.coll_bytes.values())
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.total_coll / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def fraction_of_roofline(self, model_flops_per_chip: float) -> float:
+        """useful-FLOPs time / bound time: how close the *model* math runs
+        to the hardware bound if perfectly overlapped."""
+        if self.t_bound == 0:
+            return 0.0
+        return (model_flops_per_chip / PEAK_FLOPS) / self.t_bound
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.total_coll,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+        }
+
+
+def roofline_from_compiled(compiled, hlo_text: Optional[str] = None
+                           ) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    hbm = float(ca.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    return Roofline(flops=flops, hbm_bytes=hbm,
+                    coll_bytes=collective_bytes(text))
+
+
+def model_flops(n_params_active: float, tokens: float,
+                kind: str = "train") -> float:
+    """6·N·D for training; 2·N·D for a forward/serve step (per global
+    batch)."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_params_active * tokens

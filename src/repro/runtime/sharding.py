@@ -1,0 +1,113 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Model code annotates values and parameters with *logical* axis names;
+the rules below map them to mesh axes.  The same model code then runs on
+the single-pod (data, model) mesh, the multi-pod (pod, data, model) mesh,
+or a single CPU device (no mesh: every annotation is a no-op).
+
+  batch   -> (pod, data)   data parallelism (pod axis folds into DP)
+  fsdp    -> data           parameter/optimizer storage sharding (ZeRO-ish;
+                            gathered per layer inside the scan body by SPMD)
+  tensor  -> model           TP: heads / ffn-hidden / vocab
+  expert  -> model           EP: MoE experts
+  kv_seq  -> data            sequence-parallel KV cache for long-ctx decode
+  (anything unlisted)        replicated
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "fsdp": ("data",),
+    "tensor": ("model",),
+    "expert": ("model",),
+    "capacity": ("pod", "data"),   # MoE expert-buffer capacity dim
+    "kv_seq": ("data",),
+}
+
+_state = threading.local()
+
+
+def _ctx():
+    if not hasattr(_state, "mesh"):
+        _state.mesh = None
+        _state.rules = dict(DEFAULT_RULES)
+    return _state
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: Optional[Dict] = None):
+    st = _ctx()
+    prev = (st.mesh, st.rules)
+    st.mesh = mesh
+    if rules is not None:
+        st.rules = dict(rules)
+    try:
+        yield
+    finally:
+        st.mesh, st.rules = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _ctx().mesh
+
+
+def logical_to_spec(axes: Sequence[Optional[str]],
+                    mesh: Optional[Mesh] = None) -> P:
+    """Map logical axis names to a PartitionSpec under the active rules,
+    dropping mesh axes that don't exist on the given mesh."""
+    st = _ctx()
+    mesh = mesh or st.mesh
+    mesh_axes = set(mesh.axis_names) if mesh is not None else set()
+    spec = []
+    used = set()
+    for ax in axes:
+        if ax is None:
+            spec.append(None)
+            continue
+        targets = tuple(a for a in st.rules.get(ax, ())
+                        if a in mesh_axes and a not in used)
+        used.update(targets)
+        if len(targets) == 0:
+            spec.append(None)
+        elif len(targets) == 1:
+            spec.append(targets[0])
+        else:
+            spec.append(targets)
+    while spec and spec[-1] is None:
+        spec.pop()
+    return P(*spec)
+
+
+def constrain(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint under the active mesh (no-op without one)."""
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    spec = logical_to_spec(axes, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(axes: Sequence[Optional[str]],
+                   mesh: Optional[Mesh] = None) -> Optional[NamedSharding]:
+    mesh = mesh or active_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, logical_to_spec(axes, mesh))
+
+
+def tree_shardings(spec_tree, mesh: Optional[Mesh] = None):
+    """Map a pytree of logical-axis tuples to NamedShardings."""
+    return jax.tree.map(
+        lambda axes: named_sharding(axes, mesh),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x),
+    )

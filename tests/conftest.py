@@ -1,0 +1,85 @@
+"""Shared fixtures: the paper's three example programs with concrete data.
+
+NOTE: do NOT set XLA_FLAGS/device-count here — smoke tests and benches must
+see the real single-device CPU; only launch/dryrun.py forces 512 devices.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import array_program as AP
+from repro.core import blocks as B
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+class ExampleCase:
+    def __init__(self, graph, inputs, dims, ref, out_name):
+        self.graph = graph
+        self.inputs = inputs
+        self.dims = dims
+        self.ref = ref
+        self.out_name = out_name
+
+
+def make_attention_case(rng, M=3, D=2, N=4, L=2, bm=8, bd=16, bn=8, bl=16,
+                        logit_scale=1.0):
+    d_model = D * bd
+    Q = rng.normal(size=(M * bm, d_model)) * logit_scale
+    K = rng.normal(size=(N * bn, d_model)) * logit_scale
+    V = rng.normal(size=(N * bn, L * bl))
+    scale = 1.0 / np.sqrt(d_model)
+    S = (Q @ K.T) * scale
+    Sm = S - S.max(axis=1, keepdims=True)
+    P = np.exp(Sm) / np.exp(Sm).sum(axis=1, keepdims=True)
+    ref = P @ V
+    g = AP.attention_program(scale)
+    inputs = {"Q": B.split(Q, M, D), "KT": B.split(K, N, D),
+              "VT": B.split(V.T, L, N)}
+    return ExampleCase(g, inputs, {"M": M, "D": D, "N": N, "L": L}, ref, "O")
+
+
+def make_layernorm_case(rng, M=3, K=4, N=2, bm=8, bk=8, bn=16):
+    KK = K * bk
+    X = rng.normal(size=(M * bm, KK))
+    Y = rng.normal(size=(KK, N * bn))
+    mu = X.mean(axis=1, keepdims=True)
+    sd = np.sqrt((X ** 2).mean(axis=1, keepdims=True) - mu ** 2)
+    ref = ((X - mu) / sd) @ Y
+    g = AP.layernorm_matmul_program(float(KK))
+    inputs = {"X": B.split(X, M, K), "YT": B.split(Y.T, N, K)}
+    return ExampleCase(g, inputs, {"M": M, "K": K, "N": N}, ref, "Z")
+
+
+def make_swiglu_case(rng, M=2, D=3, K=4, N=2, b=8):
+    DD = D * b
+    X = rng.normal(size=(M * b, DD))
+    W = rng.normal(size=(DD, K * b)) / np.sqrt(DD)
+    V = rng.normal(size=(DD, K * b)) / np.sqrt(DD)
+    U = rng.normal(size=(K * b, N * b)) / np.sqrt(K * b)
+    xn = X / np.sqrt((X ** 2).mean(axis=1, keepdims=True))
+    gsw = xn @ W
+    sw = gsw / (1 + np.exp(-gsw))
+    ref = (sw * (xn @ V)) @ U
+    g = AP.rmsnorm_ffn_swiglu_program(float(DD))
+    inputs = {"X": B.split(X, M, D), "WT": B.split(W.T, K, D),
+              "VT": B.split(V.T, K, D), "UT": B.split(U.T, N, K)}
+    return ExampleCase(g, inputs, {"M": M, "D": D, "K": K, "N": N}, ref, "O")
+
+
+@pytest.fixture()
+def attention_case(rng):
+    return make_attention_case(rng)
+
+
+@pytest.fixture()
+def layernorm_case(rng):
+    return make_layernorm_case(rng)
+
+
+@pytest.fixture()
+def swiglu_case(rng):
+    return make_swiglu_case(rng)

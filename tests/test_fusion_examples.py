@@ -1,0 +1,149 @@
+"""The paper's three worked examples, end to end (§5).
+
+For each example we check:
+  * every fusion snapshot interprets to the same outputs as the original
+    (the rules are logic-preserving);
+  * the final snapshot is fully fused (no internal buffered edges — the
+    paper's epilogues);
+  * the rules applied match the paper's trace (kinds and counts);
+  * global-memory traffic collapses vs. the initial program.
+"""
+
+from collections import Counter
+
+import numpy as np
+import pytest
+
+from repro.core import cost as C
+from repro.core.blocks import merge
+from repro.core.fusion import FusionTrace, fuse
+from repro.core.graph import MapNode, internal_buffered_edges
+from repro.core.interpreter import run
+
+
+def _apply_and_check(case, expected_rules=None, expected_snapshots=None):
+    trace = FusionTrace()
+    snaps = fuse(case.graph, trace)
+    for s in snaps:
+        out = run(s, case.inputs, case.dims)
+        np.testing.assert_allclose(merge(out[case.out_name]), case.ref,
+                                   rtol=1e-9, atol=1e-9)
+    assert internal_buffered_edges(snaps[-1]) == []
+    if expected_snapshots is not None:
+        assert len(snaps) == expected_snapshots
+    if expected_rules is not None:
+        got = Counter(r for r, _ in trace.steps)
+        for rule, count in expected_rules.items():
+            assert got[rule] == count, (rule, got)
+    return snaps, trace
+
+
+def test_flash_attention_rediscovery(attention_case):
+    """Example 1: the algorithm rediscovers Flash Attention in exactly the
+    paper's 17 steps (6+4+1 map fusions, 1 scale/dot swap, 3 map+reduction
+    fusions, 1 elementwise fusion, 1 map extension)."""
+    snaps, trace = _apply_and_check(
+        attention_case,
+        expected_rules={
+            "rule1_fuse_consecutive_maps": 11,
+            "rule4_swap_scale_dot": 1,
+            "rule3_fuse_map_reduction": 3,
+            "rule9_fuse_consecutive_elementwise": 1,
+            "rule6_extend_map": 1,
+        },
+        expected_snapshots=2,
+    )
+    assert len(trace.steps) == 17  # the paper's step count
+
+    # final structure: M-map{ L-map{ serial N-map{ serial D-map } } }
+    final = snaps[-1]
+    assert len(final.op_nodes()) == 1
+    m = final.nodes[final.op_nodes()[0]]
+    assert isinstance(m, MapNode) and m.dim == "M" and not m.serial
+    l = [m.inner.nodes[n] for n in m.inner.op_nodes()
+         if isinstance(m.inner.nodes[n], MapNode)]
+    assert len(l) == 1 and l[0].dim == "L"
+    n_maps = [l[0].inner.nodes[n] for n in l[0].inner.op_nodes()
+              if isinstance(l[0].inner.nodes[n], MapNode)]
+    assert len(n_maps) == 1 and n_maps[0].dim == "N" and n_maps[0].serial
+    # the N loop carries exactly two accumulators (softmax denom + PV)
+    assert sum(r is not None for r in n_maps[0].reduced) == 2
+
+
+def test_flash_attention_traffic_collapse(attention_case):
+    snaps, _ = _apply_and_check(attention_case)
+    t0 = C.traffic(attention_case.graph, attention_case.dims)
+    t1 = C.traffic(snaps[0], attention_case.dims)
+    # intermediate stores vanish except the program output
+    dims = attention_case.dims
+    assert sum(t1.stores.values()) <= dims["M"] * dims["L"] * 3
+    assert sum(t0.stores.values()) > 5 * sum(t1.stores.values())
+    assert t1.launches == 1 and t0.launches == 7
+
+
+def test_layernorm_matmul(layernorm_case):
+    """Example 2: Flash-LayerNorm+Matmul; uses both linearity swaps."""
+    snaps, trace = _apply_and_check(
+        layernorm_case,
+        expected_rules={
+            "rule4_swap_scale_dot": 1,
+            "rule5_swap_shift_dot": 1,
+            "rule6_extend_map": 1,
+        },
+        expected_snapshots=2,
+    )
+    final = snaps[-1]
+    m = final.nodes[final.op_nodes()[0]]
+    assert isinstance(m, MapNode) and m.dim == "M"
+    # inside: a single N-map whose K-loop carries 4 accumulators
+    n = [m.inner.nodes[i] for i in m.inner.op_nodes()
+         if isinstance(m.inner.nodes[i], MapNode)]
+    assert len(n) == 1 and n[0].dim == "N"
+    k = [n[0].inner.nodes[i] for i in n[0].inner.op_nodes()
+         if isinstance(n[0].inner.nodes[i], MapNode)]
+    assert len(k) == 1 and k[0].dim == "K" and k[0].serial
+    assert sum(r is not None for r in k[0].reduced) == 4
+
+
+def test_rmsnorm_ffn_swiglu(swiglu_case):
+    """Example 3: the Flash-RMSNorm+FFN-SwiGLU mega-kernel: three matmuls,
+    a Hadamard, a reduction and elementwise ops fused into one kernel, with
+    two map extensions (paper steps 23 and 25) and the Rule-8 duplication."""
+    snaps, trace = _apply_and_check(
+        swiglu_case,
+        expected_rules={
+            "rule8_duplicate_mapped_scale": 1,
+            "rule4_swap_scale_dot": 2,
+            "rule6_extend_map": 2,
+        },
+        expected_snapshots=3,
+    )
+    final = snaps[-1]
+    # fully nested M{N{K{D}}} with the D-loop carrying x^2, xW and xV accums
+    m = final.nodes[final.op_nodes()[0]]
+    n = [m.inner.nodes[i] for i in m.inner.op_nodes()
+         if isinstance(m.inner.nodes[i], MapNode)][0]
+    k = [n.inner.nodes[i] for i in n.inner.op_nodes()
+         if isinstance(n.inner.nodes[i], MapNode)][0]
+    d = [k.inner.nodes[i] for i in k.inner.op_nodes()
+         if isinstance(k.inner.nodes[i], MapNode)][0]
+    assert (m.dim, n.dim, k.dim, d.dim) == ("M", "N", "K", "D")
+    assert sum(r is not None for r in d.reduced) == 3
+    assert sum(r is not None for r in k.reduced) == 1
+
+
+def test_snapshots_trade_replication_for_buffering(swiglu_case):
+    """Rule 6 replicates work in exchange for fusion (paper §3.2): later
+    snapshots do more functional work but store less."""
+    snaps = fuse(swiglu_case.graph)
+    dims = swiglu_case.dims
+    works = [sum(C.traffic(s, dims).work.values()) for s in snaps]
+    stores = [sum(C.traffic(s, dims).stores.values()) for s in snaps]
+    assert works == sorted(works)
+    assert stores == sorted(stores, reverse=True)
+
+
+def test_fusion_does_not_mutate_input(attention_case):
+    before = attention_case.graph.describe()
+    fuse(attention_case.graph)
+    assert attention_case.graph.describe() == before

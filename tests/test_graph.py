@@ -1,0 +1,121 @@
+"""Unit tests for the block-program IR: typing, validation, bufferedness."""
+
+import numpy as np
+import pytest
+
+from repro.core import ops as O
+from repro.core.graph import (GB, Graph, InputNode, MapNode, VType,
+                              internal_buffered_edges)
+from repro.core.interpreter import eval_graph
+
+
+def _ew_map(dim, expr="a0*2.0"):
+    gb = GB()
+    x = gb.inp("x", VType((), O.BLOCK))
+    gb.out("o", gb.func(O.ew(expr), x))
+    top = GB()
+    xs = top.inp("X", VType((dim,), O.BLOCK))
+    outs = top.map(dim, gb.g, [(xs, True)])
+    top.out("O", outs[0])
+    return top.g
+
+
+def test_types_simple_map():
+    g = _ew_map("N")
+    types = g.infer_types()
+    mid = [n for n in g.op_nodes()][0]
+    assert types[(mid, 0)] == VType(("N",), O.BLOCK)
+
+
+def test_type_error_on_func_fed_list():
+    gb = GB()
+    x = gb.inp("X", VType(("N",), O.BLOCK))
+    gb.out("O", gb.func(O.ew("a0"), x))
+    with pytest.raises(TypeError):
+        gb.g.infer_types()
+
+
+def test_map_dim_mismatch_rejected():
+    gb = GB()
+    inner = GB()
+    a = inner.inp("a", VType((), O.BLOCK))
+    inner.out("o", inner.func(O.ew("a0"), a))
+    x = gb.inp("X", VType(("N",), O.BLOCK))
+    outs = gb.map("M", inner.g, [(x, True)])  # wrong dim
+    gb.out("O", outs[0])
+    with pytest.raises(TypeError):
+        gb.g.infer_types()
+
+
+def test_cycle_detection():
+    gb = GB()
+    x = gb.inp("x", VType((), O.BLOCK))
+    f1 = gb.func(O.ew("a0+a1", 2), x, x)
+    g = gb.g
+    f2 = gb.func(O.ew("a0"), f1)
+    # manually create a cycle
+    g.edges = {e for e in g.edges if not (e.dst == f1[0] and e.dp == 1)}
+    g.connect(f2, (f1[0], 1))
+    with pytest.raises(ValueError):
+        g.topo()
+
+
+def test_reachability():
+    gb = GB()
+    x = gb.inp("x", VType((), O.BLOCK))
+    a = gb.func(O.ew("a0"), x)
+    b = gb.func(O.ew("a0"), a)
+    c = gb.func(O.ew("a0"), b)
+    gb.out("o", c)
+    g = gb.g
+    assert g.reachable(a[0], c[0])
+    assert not g.reachable(c[0], a[0])
+    assert g.reachable(a[0], b[0], skip_direct=True) is False
+
+
+def test_internal_buffered_edges_counts_intermediates_only():
+    # X -> map(ew) -> map(ew) -> O : one internal buffered edge
+    gb = GB()
+    inner1 = GB()
+    a = inner1.inp("a", VType((), O.BLOCK))
+    inner1.out("o", inner1.func(O.ew("a0*2.0"), a))
+    inner2 = GB()
+    b = inner2.inp("b", VType((), O.BLOCK))
+    inner2.out("o", inner2.func(O.ew("a0+1.0"), b))
+    x = gb.inp("X", VType(("N",), O.BLOCK))
+    m1 = gb.map("N", inner1.g, [(x, True)])
+    m2 = gb.map("N", inner2.g, [(m1[0], True)])
+    gb.out("O", m2[0])
+    assert len(internal_buffered_edges(gb.g)) == 1
+
+
+def test_reduced_port_yields_item():
+    gb = GB()
+    inner = GB()
+    a = inner.inp("a", VType((), O.BLOCK))
+    inner.out("o", inner.func(O.ROW_SUM, a))
+    x = gb.inp("X", VType(("N",), O.BLOCK))
+    outs = gb.map("N", inner.g, [(x, True)], reduced=["+"])
+    gb.out("O", outs[0])
+    types = gb.g.infer_types()
+    mid = gb.g.op_nodes()[0]
+    assert types[(mid, 0)] == VType((), O.VECTOR)
+    xs = [np.ones((4, 8)) * i for i in range(3)]
+    out = eval_graph(gb.g, [xs], {"N": 3})
+    np.testing.assert_allclose(out[0], np.sum([x.sum(1) for x in xs], axis=0))
+
+
+def test_elementwise_compose():
+    u = O.ew("a0*C0", 1, C0=0.5)
+    v = O.ew("exp(a0)+a1", 2)
+    c = O.compose_elementwise(u, v, 0)
+    assert c.n_in == 2
+    x, y = np.array([1.0, 2.0]), np.array([3.0, 4.0])
+    np.testing.assert_allclose(c.apply(np, x, y), np.exp(x * 0.5) + y)
+
+
+def test_elementwise_compose_const_collision():
+    u = O.ew("a0*C0", 1, C0=2.0)
+    v = O.ew("a0+C0", 1, C0=5.0)
+    c = O.compose_elementwise(u, v, 0)
+    np.testing.assert_allclose(c.apply(np, np.array([1.0])), 1.0 * 2.0 + 5.0)

@@ -1,0 +1,140 @@
+"""Property-based tests (hypothesis) on the system's invariants.
+
+The central invariant is the paper's: *every substitution rule is
+logic-preserving* — so the full fusion algorithm must preserve program
+semantics for arbitrary programs built from the operator vocabulary, for
+arbitrary block decompositions.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import array_program as AP
+from repro.core import blocks as B
+from repro.core import cost as C
+from repro.core import ops as O
+from repro.core.fusion import fuse
+from repro.core.graph import internal_buffered_edges
+from repro.core.interpreter import run
+
+dims_st = st.tuples(st.integers(1, 3), st.integers(1, 3),
+                    st.integers(1, 4), st.integers(1, 3))
+
+
+def _random_chain_program(rng, n_ops: int):
+    """A random array program: X(M,K) through a chain of row-wise norms,
+    elementwise ops and matmuls (the paper's operator vocabulary)."""
+    ap = AP.ArrayProgramBuilder()
+    x = ap.input("X", ("M", "K"))
+    weights = []
+    val = x
+    kinds = rng.integers(0, 4, size=n_ops)
+    for i, kind in enumerate(kinds):
+        if kind == 0:
+            val = ap.elementwise("a0*a0+C0", val, C0=float(rng.normal()))
+        elif kind == 1:
+            val = ap.rmsnorm_rows(val, dd=8.0)
+        elif kind == 2:
+            val = ap.layernorm_rows(val, kk=8.0)
+        else:
+            name = f"W{i}"
+            ap_in = ap.input(name, ("K", "K"))
+            weights.append(name)
+            val = ap.matmul_t(val, ap_in, out_dim="K")
+    ap.output("O", val)
+    return ap.build(), weights
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), n_ops=st.integers(1, 4))
+def test_fusion_preserves_semantics_on_random_programs(seed, n_ops):
+    rng = np.random.default_rng(seed)
+    g, weights = _random_chain_program(rng, n_ops)
+    M, K = 2, 2
+    bs = 4
+    X = rng.normal(size=(M * bs, K * bs))
+    inputs = {"X": B.split(X, M, K)}
+    for w in weights:
+        inputs[w] = B.split(rng.normal(size=(K * bs, K * bs)) / 3.0, K, K)
+    dims = {"M": M, "K": K}
+    ref = B.merge(run(g, inputs, dims)["O"])
+    for snap in fuse(g):
+        got = B.merge(run(snap, inputs, dims)["O"])
+        np.testing.assert_allclose(got, ref, rtol=1e-8, atol=1e-8)
+
+
+@settings(max_examples=10, deadline=None)
+@given(dims=dims_st, seed=st.integers(0, 1000))
+def test_attention_fusion_invariant_to_block_decomposition(dims, seed):
+    """The fused result must not depend on how matrices are split into
+    blocks (the selection algorithm chooses shapes after fusion)."""
+    M, D, N, L = dims
+    rng = np.random.default_rng(seed)
+    bs = 4
+    Q = rng.normal(size=(M * bs, D * bs))
+    K = rng.normal(size=(N * bs, D * bs))
+    V = rng.normal(size=(N * bs, L * bs))
+    g = AP.attention_program(0.3)
+    snaps = fuse(g)
+    inputs = {"Q": B.split(Q, M, D), "KT": B.split(K, N, D),
+              "VT": B.split(V.T, L, N)}
+    out = B.merge(run(snaps[-1], inputs, {"M": M, "D": D, "N": N, "L": L})
+                  ["O"])
+    S = (Q @ K.T) * 0.3
+    P = np.exp(S)
+    ref = (P / P.sum(1, keepdims=True)) @ V
+    np.testing.assert_allclose(out, ref, rtol=1e-7, atol=1e-7)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), n_ops=st.integers(1, 4))
+def test_fusion_never_increases_stores(seed, n_ops):
+    """Fusion rules only remove buffered edges: the first no-extension
+    snapshot can never store MORE than the unfused program."""
+    rng = np.random.default_rng(seed)
+    g, _ = _random_chain_program(rng, n_ops)
+    dims = {"M": 2, "K": 3}
+    before = C.traffic(g, dims)
+    snap0 = fuse(g)[0]
+    after = C.traffic(snap0, dims)
+    assert sum(after.stores.values()) <= sum(before.stores.values())
+    assert after.launches <= before.launches
+
+
+@settings(max_examples=25, deadline=None)
+@given(exprs=st.lists(st.sampled_from(["a0*2.0", "exp(a0)", "a0+1.5",
+                                       "a0*a0", "1/(1+exp(-a0))"]),
+                      min_size=2, max_size=5),
+       seed=st.integers(0, 100))
+def test_elementwise_composition_associative(exprs, seed):
+    """Rule 9 composition: folding a chain of elementwise ops one at a time
+    equals applying them sequentially."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(3, 4))
+    composed = O.ew(exprs[0])
+    for e in exprs[1:]:
+        composed = O.compose_elementwise(composed, O.ew(e), 0)
+    want = x
+    for e in exprs:
+        want = O.ew(e).apply(np, want)
+    np.testing.assert_allclose(composed.apply(np, x), want,
+                               rtol=1e-10, atol=1e-10)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000),
+       splits=st.tuples(st.integers(1, 4), st.integers(1, 4)))
+def test_interpreter_block_split_invariance(seed, splits):
+    """Interpreting any program is invariant to the block decomposition of
+    its inputs (blocks are an implementation detail, paper §2.1)."""
+    rng = np.random.default_rng(seed)
+    M, K = splits
+    X = rng.normal(size=(8, 12))
+    g = AP.layernorm_matmul_program(12.0)
+    Y = rng.normal(size=(12, 8))
+    out = B.merge(run(g, {"X": B.split(X, M, K), "YT": B.split(Y.T, 2, K)},
+                      {"M": M, "K": K, "N": 2})["Z"])
+    mu = X.mean(1, keepdims=True)
+    sd = np.sqrt((X ** 2).mean(1, keepdims=True) - mu ** 2)
+    np.testing.assert_allclose(out, ((X - mu) / sd) @ Y, rtol=1e-8,
+                               atol=1e-8)

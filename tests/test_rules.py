@@ -1,0 +1,162 @@
+"""Per-rule unit tests (paper §3), each on a minimal synthetic program."""
+
+import numpy as np
+import pytest
+
+from repro.core import ops as O
+from repro.core.blocks import merge, split
+from repro.core.graph import GB, MapNode, VType
+from repro.core.interpreter import eval_graph, run
+from repro.core.rules import (Rule1, Rule2, Rule3, Rule7, Rule9)
+
+
+def _ew_map_graph(expr, n_in=1):
+    gb = GB()
+    ins = [gb.inp(f"a{i}", VType((), O.BLOCK)) for i in range(n_in)]
+    gb.out("o", gb.func(O.ew(expr, n_in), *ins))
+    return gb.g
+
+
+def _chain_program():
+    """X -> map(x*2) -> map(x+1) -> O."""
+    gb = GB()
+    x = gb.inp("X", VType(("N",), O.BLOCK))
+    m1 = gb.map("N", _ew_map_graph("a0*2.0"), [(x, True)])
+    m2 = gb.map("N", _ew_map_graph("a0+1.0"), [(m1[0], True)])
+    gb.out("O", m2[0])
+    return gb.g
+
+
+def test_rule1_fuses_chain():
+    g = _chain_program()
+    xs = [np.full((2, 2), float(i)) for i in range(3)]
+    ref = eval_graph(g, [xs], {"N": 3})[0]
+    m = Rule1.match(g)
+    assert m is not None
+    Rule1.apply(g, m)
+    assert len(g.op_nodes()) == 1
+    out = eval_graph(g, [xs], {"N": 3})[0]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref))
+    assert Rule1.match(g) is None
+
+
+def test_rule1_blocked_by_indirect_path():
+    """u -> w -> v plus u -> v: fusing u,v would create a cycle."""
+    gb = GB()
+    x = gb.inp("X", VType(("N",), O.BLOCK))
+    u = gb.map("N", _ew_map_graph("a0*2.0"), [(x, True)])
+    w = gb.map("N", _ew_map_graph("a0+3.0"), [(u[0], True)])
+    v = gb.map("N", _ew_map_graph("a0+a1", 2), [(u[0], True), (w[0], True)])
+    gb.out("O", v[0])
+    g = gb.g
+    uid = u[0][0]
+    vid = v[0][0]
+    m = Rule1.match(g)
+    assert m is not None and not (m.data["u"] == uid and m.data["v"] == vid)
+
+
+def test_rule1_blocked_by_reduced_edge():
+    """v consuming u's accumulated (completed) output cannot fuse."""
+    gb = GB()
+    inner = GB()
+    a = inner.inp("a", VType((), O.BLOCK))
+    inner.out("o", inner.func(O.ew("a0"), a))
+    x = gb.inp("X", VType(("N",), O.BLOCK))
+    u = gb.map("N", inner.g, [(x, True)], reduced=["+"])
+    inner2 = GB()
+    b = inner2.inp("b", VType((), O.BLOCK))
+    c = inner2.inp("c", VType((), O.BLOCK))
+    inner2.out("o", inner2.func(O.ew("a0+a1", 2), b, c))
+    v = gb.map("N", inner2.g, [(x, True), (u[0], False)])
+    gb.out("O", v[0])
+    assert Rule1.match(gb.g) is None
+
+
+def test_rule2_fuses_siblings_and_merges_parent():
+    gb = GB()
+    x = gb.inp("X", VType(("N",), O.BLOCK))
+    m1 = gb.map("N", _ew_map_graph("a0*2.0"), [(x, True)])
+    m2 = gb.map("N", _ew_map_graph("a0+1.0"), [(x, True)])
+    o1 = gb.out("O1", m1[0])
+    o2 = gb.out("O2", m2[0])
+    g = gb.g
+    m = Rule2.match(g)
+    assert m is not None
+    Rule2.apply(g, m)
+    assert len(g.op_nodes()) == 1
+    fused = g.nodes[g.op_nodes()[0]]
+    assert fused.n_in() == 1  # shared parent merged into one port
+    xs = [np.full((2, 2), float(i)) for i in range(3)]
+    out = eval_graph(g, [xs], {"N": 3})
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray([x * 2 for x in xs]))
+    np.testing.assert_allclose(np.asarray(out[1]), np.asarray([x + 1 for x in xs]))
+
+
+def test_rule3_moves_reduction_inside():
+    gb = GB()
+    inner = GB()
+    a = inner.inp("a", VType((), O.BLOCK))
+    inner.out("o", inner.func(O.ROW_SUM, a))
+    x = gb.inp("X", VType(("N",), O.BLOCK))
+    m1 = gb.map("N", inner.g, [(x, True)])
+    r = gb.reduce(m1[0])
+    gb.out("O", r)
+    g = gb.g
+    m = Rule3.match(g)
+    assert m is not None
+    Rule3.apply(g, m)
+    mnode = g.nodes[g.op_nodes()[0]]
+    assert isinstance(mnode, MapNode) and mnode.reduced[0] == "+"
+    xs = [np.arange(6.0).reshape(2, 3) + i for i in range(4)]
+    out = eval_graph(g, [xs], {"N": 4})[0]
+    np.testing.assert_allclose(out, np.sum([x.sum(1) for x in xs], axis=0))
+
+
+def test_rule3_requires_sole_consumer():
+    gb = GB()
+    inner = GB()
+    a = inner.inp("a", VType((), O.BLOCK))
+    inner.out("o", inner.func(O.ROW_SUM, a))
+    x = gb.inp("X", VType(("N",), O.BLOCK))
+    m1 = gb.map("N", inner.g, [(x, True)])
+    r = gb.reduce(m1[0])
+    gb.out("O", r)
+    gb.out("O2", m1[0])  # second consumer of the list
+    assert Rule3.match(gb.g) is None
+
+
+def test_rule7_peel_first_iteration():
+    g = _chain_program()
+    xs = [np.full((2, 2), float(i)) for i in range(4)]
+    ref = eval_graph(g, [xs], {"N": 4})[0]
+    m = Rule7.match(g)
+    assert m is not None
+    Rule7.apply(g, m)
+    out = eval_graph(g, [xs], {"N": 4})[0]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref))
+
+
+def test_rule9_composes_elementwise():
+    gb = GB()
+    x = gb.inp("x", VType((), O.BLOCK))
+    f1 = gb.func(O.ew("a0*C0", 1, C0=0.5), x)
+    f2 = gb.func(O.ew("exp(a0)"), f1)
+    gb.out("o", f2)
+    g = gb.g
+    m = Rule9.match(g)
+    assert m is not None
+    Rule9.apply(g, m)
+    assert len(g.op_nodes()) == 1
+    xv = np.array([[1.0, 2.0]])
+    out = eval_graph(g, [xv], {})[0]
+    np.testing.assert_allclose(out, np.exp(xv * 0.5))
+
+
+def test_rule9_requires_sole_consumer():
+    gb = GB()
+    x = gb.inp("x", VType((), O.BLOCK))
+    f1 = gb.func(O.ew("a0*2.0"), x)
+    f2 = gb.func(O.ew("exp(a0)"), f1)
+    gb.out("o", f2)
+    gb.out("o2", f1)
+    assert Rule9.match(gb.g) is None
