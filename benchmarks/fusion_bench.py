@@ -1,12 +1,19 @@
 """One benchmark per paper example (the paper's results are its three
 worked examples): global-memory traffic before/after fusion, kernel-launch
 counts, work replication across snapshots, and fusion-algorithm runtime.
+
+``run_pipeline`` additionally *executes* each example through
+``pipeline.compile`` on the jax backend — fused vs unfused wall time next
+to the cost model's predicted traffic, from the same driver the model
+layers use.
 """
 
 from __future__ import annotations
 
 import time
 from typing import Dict, List
+
+import numpy as np
 
 from repro.core import array_program as AP
 from repro.core import cost as C
@@ -54,7 +61,71 @@ def bench_example(name: str) -> List[Dict]:
     return rows
 
 
+def _random_inputs(g, dims: Dict[str, int], bs: int, rng) -> Dict:
+    out = {}
+    for nid in g.input_ids:
+        node = g.nodes[nid]
+        shape = tuple(dims[d] * bs for d in node.vtype.dims)
+        out[node.name] = (rng.normal(size=shape)
+                          / max(shape[-1], 1) ** 0.5).astype(np.float32)
+    return out
+
+
+def bench_pipeline_example(name: str, repeats: int = 5,
+                           bs: int = 16) -> List[Dict]:
+    """Fused vs unfused wall time through ``pipeline.compile`` (jax
+    backend), with the cost model's predicted traffic side by side."""
+    import jax
+
+    from repro import pipeline
+
+    build, dims = EXAMPLES[name]
+    g = build()
+    blocks = {d: bs for d in dims}
+    inputs = _random_inputs(g, dims, bs, np.random.default_rng(0))
+    cache = pipeline.KernelCache(disk=False)
+
+    def timed(kern) -> float:
+        jax.block_until_ready(list(kern(inputs).values()))  # warmup/compile
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            jax.block_until_ready(list(kern(inputs).values()))
+            best = min(best, time.perf_counter() - t0)
+        return best * 1e6
+
+    kf = pipeline.compile(g, dims, backend="jax", blocks=blocks,
+                          cache=cache)
+    ku = pipeline.compile(g, dims, backend="jax", blocks=blocks,
+                          fused=False, cache=cache)
+    fused_us, unfused_us = timed(kf), timed(ku)
+    # the second compile must be an in-process cache hit
+    rehit = pipeline.compile(g, dims, backend="jax", blocks=blocks,
+                             cache=cache).cache_hit
+    return [{
+        "name": f"pipeline_{name}",
+        "us_per_call": fused_us,
+        "derived": (
+            f"unfused_us={unfused_us:.1f};"
+            f"speedup={unfused_us / max(fused_us, 1e-9):.2f}x;"
+            f"pred_cost_fused={kf.cost:.3g};"
+            f"pred_cost_unfused={kf.initial_cost:.3g};"
+            f"pred_traffic_reduction={kf.predicted_traffic_reduction:.2f}x;"
+            f"snapshot={kf.snapshot_index};recompile_hit={rehit}"
+        ),
+    }]
+
+
+def run_pipeline() -> List[Dict]:
+    rows = []
+    for name in EXAMPLES:
+        rows.extend(bench_pipeline_example(name))
+    return rows
+
+
 def run() -> List[Dict]:
+    """Traffic-model rows only (the original entry point); executing
+    pipeline rows are a separate section: ``run_pipeline``."""
     rows = []
     for name in EXAMPLES:
         rows.extend(bench_example(name))

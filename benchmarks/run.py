@@ -3,21 +3,40 @@
 Prints ``name,us_per_call,derived`` CSV:
   * fusion_*    — the paper's three worked examples: traffic collapse,
                   launch counts, work replication, rule applications;
+  * pipeline_*  — the same examples *executed* through
+                  ``pipeline.compile``: fused vs unfused wall time next to
+                  the cost model's predicted traffic (the end-to-end loop);
   * kernel_*    — fused vs naive kernel wall times (host backend);
   * roofline_*  — per (arch x shape x mesh) bound times from the dry-run
                   artifact (if dryrun_results.json exists).
+
+``--only SECTION`` (fusion | pipeline | kernel | roofline) restricts the
+run; default runs everything.
 """
 
 from __future__ import annotations
+
+import argparse
 
 
 def main() -> None:
     from benchmarks import fusion_bench, kernel_bench, roofline
 
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=["fusion", "pipeline", "kernel",
+                                       "roofline"], default=None)
+    args = ap.parse_args()
+
+    sections = {
+        "fusion": fusion_bench.run,
+        "pipeline": fusion_bench.run_pipeline,
+        "kernel": kernel_bench.run,
+        "roofline": roofline.run,
+    }
     rows = []
-    rows += fusion_bench.run()
-    rows += kernel_bench.run()
-    rows += roofline.run()
+    for name, fn in sections.items():
+        if args.only is None or args.only == name:
+            rows += fn()
 
     print("name,us_per_call,derived")
     for r in rows:

@@ -64,3 +64,20 @@ ref = (P / P.sum(1, keepdims=True)) @ V
 out = B.merge(run_stabilized(snapshots[-1], inputs, dims)["O"])
 print(f"max |fused - numpy| = {np.abs(out - ref).max():.2e}  "
       "(with the appendix's significand-exponent safety)")
+
+# 5. the end-to-end pipeline: one call drives fuse -> selection (traffic
+#    cost model) -> codegen and returns a cached, executing kernel that
+#    takes plain dense arrays.  Swap backend="jax" for "py" (interpreter
+#    oracle) or "pallas" (one mega-kernel; interpret-mode off-TPU).
+from repro import pipeline
+
+kern = pipeline.compile(graph, dims, backend="jax")
+fused_out = np.asarray(kern({"Q": Q, "KT": K, "VT": V.T})["O"])
+print()
+print(f"pipeline.compile: backend={kern.backend} "
+      f"snapshot={kern.snapshot_index} "
+      f"predicted traffic x{kern.predicted_traffic_reduction:.2f} "
+      f"max |kernel - numpy| = {np.abs(fused_out - ref).max():.2e}")
+again = pipeline.compile(graph, dims, backend="jax")
+print(f"second compile: cache_hit={again.cache_hit!r} "
+      "(in-process; plans also persist on disk across processes)")

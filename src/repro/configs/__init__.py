@@ -65,6 +65,19 @@ def get_reduced_config(arch: str, **overrides) -> ModelConfig:
     return reduced_config(get_config(arch), **overrides)
 
 
+def with_pipeline(cfg: ModelConfig, backend: str = "jax",
+                  attn: bool = True, mlp: bool = True) -> ModelConfig:
+    """Route the config's attention / gated-MLP blocks through the
+    ``repro.pipeline`` fusion driver (fuse -> select -> codegen -> cached
+    kernel) instead of the hand-written kernels.  ``backend`` is the
+    pipeline codegen backend (``jax`` everywhere; ``pallas`` on TPU)."""
+    return dataclasses.replace(
+        cfg,
+        attn_impl="pipeline" if attn else cfg.attn_impl,
+        mlp_impl="pipeline" if mlp else cfg.mlp_impl,
+        pipeline_backend=backend)
+
+
 def cell_supported(arch: str, shape: str) -> Tuple[bool, str]:
     """Is the (arch x shape) cell runnable?  Returns (ok, reason)."""
     if shape == "long_500k" and arch not in SUBQUADRATIC:

@@ -196,7 +196,9 @@ class ArrayProgramBuilder:
         fusion structure."""
         sq = self.elementwise("a0*a0", x)
         s = self.row_sums(sq)
-        irms = self.reduce_rows(s, f"1/sqrt(a0/DD + {eps!r})", DD=dd)
+        # float() so an np scalar eps neither bakes an uneval-able repr
+        # into the expression nor perturbs the graph fingerprint
+        irms = self.reduce_rows(s, f"1/sqrt(a0/DD + {float(eps)!r})", DD=dd)
         return self.row_apply(O.ROW_SCALE, x, irms)
 
     def swish(self, x: AVal) -> AVal:
@@ -243,17 +245,18 @@ def layernorm_matmul_program(kk: float) -> Graph:
     return ap.build()
 
 
-def rmsnorm_ffn_swiglu_program(dd: float) -> Graph:
+def rmsnorm_ffn_swiglu_program(dd: float, eps: float = 0.0) -> Graph:
     """Paper Example 3: O = (Swish(RMS(X) @ W) * (RMS(X) @ V)) @ U.
 
     Inputs: X (M, D); W^T (K, D); V^T (K, D); U^T (N, K).  Output: O (M, N).
-    """
+    ``eps`` matches the model layers' ``rms_norm`` stabilizer (inside the
+    sqrt); the paper's listing has none."""
     ap = ArrayProgramBuilder()
     x = ap.input("X", ("M", "D"))
     wt = ap.input("WT", ("K", "D"))
     vt = ap.input("VT", ("K", "D"))
     ut = ap.input("UT", ("N", "K"))
-    xn = ap.rmsnorm_rows(x, dd)
+    xn = ap.rmsnorm_rows(x, dd, eps=eps)
     g = ap.swish(ap.matmul_t(xn, wt, out_dim="K"))
     u = ap.matmul_t(xn, vt, out_dim="K")
     h = ap.hadamard(g, u)

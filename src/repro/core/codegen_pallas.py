@@ -116,8 +116,19 @@ def _eval_inner(g: Graph, env: Dict, dims: Dict[str, int]) -> List[Any]:
     return [out[oid] for oid in g.output_ids]
 
 
+def resolve_interpret(interpret) -> bool:
+    """``"auto"``/``None`` -> interpret everywhere except a real TPU
+    backend.  Single source of the policy for emit and pipeline.compile."""
+    if interpret in (None, "auto"):
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
 def emit(g: Graph, dims: Dict[str, int], blocks: Dict[str, int],
-         interpret: bool = True) -> Callable[..., jax.Array]:
+         interpret="auto") -> Callable[..., jax.Array]:
+    """``interpret`` may be a bool, ``None``, or ``"auto"`` (see
+    :func:`resolve_interpret`)."""
+    interpret = resolve_interpret(interpret)
     kp = plan(g)
     grid_axes = kp.grid_dims + [kp.red_dim]
     in_names = [g.nodes[i].name for i in g.input_ids]

@@ -182,6 +182,19 @@ def _outer_indices(env, g, nid) -> Tuple[str, ...]:
     return ()
 
 
+def compile_py(g: Graph, dims: Dict[str, int]):
+    """Executable form of the listing semantics: a plain-python callable
+    ``fn({name: nested_block_lists}) -> {name: nested_block_lists}`` backed
+    by the reference interpreter.  This is the pipeline's ``py`` backend —
+    the slow, obviously-correct end of the differential harness."""
+    from repro.core.interpreter import run
+
+    def fn(inputs: Dict[str, object]) -> Dict[str, object]:
+        return run(g, inputs, dims)
+
+    return fn
+
+
 def render(g: Graph) -> str:
     """Render a top-level block program as a paper-style listing."""
     em = _Emitter()

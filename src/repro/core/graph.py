@@ -22,6 +22,7 @@ incident to program inputs/outputs (which live in global memory).
 from __future__ import annotations
 
 import copy
+import hashlib
 from dataclasses import dataclass, field, replace
 from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
@@ -282,6 +283,67 @@ class Graph:
 
     def clone(self) -> "Graph":
         return copy.deepcopy(self)
+
+    # -- identity ---------------------------------------------------------------
+    def canonical(self) -> str:
+        """A canonical serialization of the whole hierarchy.
+
+        Node ids are renumbered by topological order, so a program built
+        by the same deterministic construction sequence (e.g. the
+        ``array_program`` builders) serializes identically in every
+        process.  This is *not* full graph-isomorphism canonicalization:
+        two equal programs whose independent nodes were inserted in
+        different orders may serialize differently — that costs a
+        spurious cache miss, never a wrong hit.  Functional operators
+        contribute their full ``Op.signature()`` (expression and
+        constants included) and ``MiscNode`` functions hash their
+        bytecode+consts, so programs differing only in baked-in behavior
+        do not collide."""
+        order = self.topo()
+        renum = {nid: i for i, nid in enumerate(order)}
+        parts: List[str] = []
+        for nid in order:
+            node = self.nodes[nid]
+            if isinstance(node, InputNode):
+                lbl = f"in:{node.name}:{node.vtype!r}"
+            elif isinstance(node, OutputNode):
+                lbl = f"out:{node.name}"
+            elif isinstance(node, FuncNode):
+                lbl = f"func:{node.op.signature()!r}"
+            elif isinstance(node, ReduceNode):
+                lbl = f"reduce:{node.op}"
+            elif isinstance(node, MiscNode):
+                fn_tag = ""
+                if node.fn is not None:
+                    code = getattr(node.fn, "__code__", None)
+                    if code is not None:
+                        fn_tag = ":" + hashlib.sha256(
+                            code.co_code
+                            + repr(code.co_consts).encode()
+                        ).hexdigest()[:12]
+                    else:
+                        fn_tag = ":" + getattr(node.fn, "__qualname__",
+                                               "fn")
+                lbl = f"misc:{node.name}:{node.n_in()}:{node.n_out()}{fn_tag}"
+            elif isinstance(node, MapNode):
+                m = "".join("1" if x else "0" for x in node.mapped)
+                r = ",".join("-" if x is None else x for x in node.reduced)
+                lbl = (f"map:{node.dim}:m={m}:r={r}"
+                       f":inner={{{node.inner.canonical()}}}")
+            else:
+                raise TypeError(node)
+            ins = ",".join(f"{renum[e.src]}.{e.sp}"
+                           for e in self.in_edges(nid))
+            parts.append(f"{renum[nid]}={lbl}<[{ins}]")
+        io = ("I:" + ",".join(str(renum[i]) for i in self.input_ids)
+              + ";O:" + ",".join(str(renum[o]) for o in self.output_ids))
+        return io + "|" + ";".join(parts)
+
+    def fingerprint(self) -> str:
+        """Stable content hash of the program (hex).  Equal for
+        structurally identical programs regardless of process or node-id
+        allocation order; used as the kernel-cache key component."""
+        return hashlib.sha256(self.canonical().encode()).hexdigest()[:32]
 
     # -- typing ----------------------------------------------------------------
     def infer_types(self, in_types: Optional[Sequence[VType]] = None

@@ -172,7 +172,11 @@ class Elementwise(Op):
         return out
 
     def signature(self):
-        return ("ew", self.expr, self.n_in, tuple(sorted(self.consts.items())))
+        # normalize const scalar types (np.float64 is a float subclass with
+        # a different repr) so structurally-equal ops fingerprint equally
+        return ("ew", self.expr, self.n_in,
+                tuple(sorted((k, float(v))
+                             for k, v in self.consts.items())))
 
     def clone(self):
         return Elementwise(self.expr, self.n_in, dict(self.consts))

@@ -58,11 +58,14 @@ def select(g: Graph, dims: Dict[str, int],
 
 
 def autotune(g: Graph, dim_candidates: Dict[str, Sequence[int]],
-             item_bytes: Optional[Dict[str, int]] = None) -> Selected:
+             item_bytes: Optional[Dict[str, int]] = None,
+             snapshots: Optional[List[Graph]] = None) -> Selected:
     """Sweep block-count assignments (the paper's block-shape choice) and
     return the globally cheapest (dims, snapshot).  The fusion algorithm is
-    invoked ONCE — its choices don't depend on block shapes (paper §1)."""
-    snaps = fuse(g)
+    invoked ONCE — its choices don't depend on block shapes (paper §1).
+    Callers that already ran ``fuse`` (e.g. ``pipeline.compile``) pass the
+    snapshot list via ``snapshots`` to avoid re-fusing."""
+    snaps = snapshots if snapshots is not None else fuse(g)
     best: Optional[Selected] = None
     names = sorted(dim_candidates)
     for combo in itertools.product(*(dim_candidates[n] for n in names)):

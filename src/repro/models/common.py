@@ -69,8 +69,12 @@ class ModelConfig:
     n_vision_tokens: int = 0
     # --- runtime ---
     dtype: Any = jnp.bfloat16
-    attn_impl: str = "xla"       # xla | ref | pallas | interpret
+    attn_impl: str = "xla"       # xla | ref | pallas | interpret | pipeline
     mlp_impl: str = "fused_ref"  # fused_ref | pallas | interpret | unfused
+                                 # | pipeline
+    pipeline_backend: str = "jax"  # codegen backend for the *pipeline*
+                                 # impls: py | jax | pallas (the fusion-
+                                 # derived kernels from repro.pipeline)
     remat: bool = True
     remat_policy: str = "full"   # full | dots  (dots: save matmul outputs,
                                  # no recompute of the big dots in backward)

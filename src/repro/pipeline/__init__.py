@@ -1,0 +1,19 @@
+"""``repro.pipeline`` — the end-to-end fusion pipeline.
+
+``compile(graph, dims, backend=...)`` drives the whole paper loop —
+fusion algorithm -> snapshot/block-shape selection (traffic cost model)
+-> backend codegen — and memoizes the result in a two-level kernel cache
+(in-process callables + on-disk compilation plans).  Model layers and
+benchmarks execute through this driver; it is the substrate later
+scaling work (sharding, batching, serving) compiles through.
+"""
+
+from repro.pipeline.cache import (CacheKey, CachePlan, CacheStats,
+                                  KernelCache, default_cache,
+                                  reset_default_cache)
+from repro.pipeline.driver import BACKENDS, CompiledKernel, compile
+
+__all__ = [
+    "BACKENDS", "CacheKey", "CachePlan", "CacheStats", "CompiledKernel",
+    "KernelCache", "compile", "default_cache", "reset_default_cache",
+]

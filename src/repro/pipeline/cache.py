@@ -1,0 +1,178 @@
+"""Two-level kernel cache for ``pipeline.compile``.
+
+* **in-process** — compiled-callable objects keyed by the full compile key;
+  a hit returns the existing jitted kernel with zero work.
+* **on-disk** — the *compilation plan* (selected snapshot index, dims,
+  costs) as JSON plus the selected snapshot graph itself pickled next to
+  it.  A disk hit skips fusion, the autotune sweep, and snapshot
+  selection; only backend lowering (fast) reruns.  Programs containing
+  un-picklable ``MiscNode.fn`` closures degrade gracefully to plan-only
+  entries (fusion reruns, selection doesn't).
+
+Keys combine the graph fingerprint with every input that affects the
+emitted kernel: backend, dims, block shapes, and whether fusion ran.  The
+cache directory defaults to ``~/.cache/repro/kernels`` and is overridable
+via ``$REPRO_KERNEL_CACHE`` (tests point it at a tmpdir).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import pickle
+from dataclasses import asdict, dataclass, field
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+from repro.core.graph import Graph
+
+_SCHEMA_VERSION = 1
+
+
+def _norm(d: Optional[Dict[str, Any]]) -> Tuple:
+    return tuple(sorted(d.items())) if d else ()
+
+
+@dataclass(frozen=True)
+class CacheKey:
+    fingerprint: str
+    backend: str
+    dims: Tuple = ()
+    blocks: Tuple = ()
+    fused: bool = True
+    opts: Tuple = ()  # backend/selection options that change the kernel
+                      # (resolved interpret flag, jit, item_bytes, ...)
+
+    @classmethod
+    def make(cls, fingerprint: str, backend: str,
+             dims: Optional[Dict[str, int]],
+             blocks: Optional[Dict[str, int]], fused: bool,
+             opts: Tuple = ()) -> "CacheKey":
+        return cls(fingerprint, backend, _norm(dims), _norm(blocks), fused,
+                   opts)
+
+    def digest(self) -> str:
+        raw = json.dumps([_SCHEMA_VERSION, self.fingerprint, self.backend,
+                          self.dims, self.blocks, self.fused, self.opts])
+        return hashlib.sha256(raw.encode()).hexdigest()[:32]
+
+
+@dataclass
+class CachePlan:
+    """What selection decided — everything needed to re-lower without
+    re-running fusion or the block-shape sweep."""
+
+    snapshot_index: int
+    dims: Dict[str, int]
+    cost: float
+    costs: Tuple[float, ...]
+    initial_cost: float
+
+    def to_json(self) -> Dict[str, Any]:
+        d = asdict(self)
+        d["costs"] = list(self.costs)
+        return d
+
+    @classmethod
+    def from_json(cls, d: Dict[str, Any]) -> "CachePlan":
+        return cls(int(d["snapshot_index"]), dict(d["dims"]),
+                   float(d["cost"]), tuple(d["costs"]),
+                   float(d["initial_cost"]))
+
+
+@dataclass
+class CacheStats:
+    memory_hits: int = 0
+    disk_hits: int = 0
+    misses: int = 0
+
+
+class KernelCache:
+    def __init__(self, root: Optional[os.PathLike] = None,
+                 disk: bool = True):
+        if root is None:
+            root = os.environ.get(
+                "REPRO_KERNEL_CACHE",
+                os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                             "kernels"))
+        self.root = Path(root)
+        self.disk = disk
+        self._kernels: Dict[CacheKey, Any] = {}
+        self.stats = CacheStats()
+
+    # -- in-process level ---------------------------------------------------
+    def get_kernel(self, key: CacheKey):
+        k = self._kernels.get(key)
+        if k is not None:
+            self.stats.memory_hits += 1
+        return k
+
+    def put_kernel(self, key: CacheKey, kernel) -> None:
+        self._kernels[key] = kernel
+
+    # -- on-disk level ------------------------------------------------------
+    def _paths(self, key: CacheKey) -> Tuple[Path, Path]:
+        d = key.digest()
+        return self.root / f"{d}.json", self.root / f"{d}.graph.pkl"
+
+    def get_plan(self, key: CacheKey
+                 ) -> Tuple[Optional[CachePlan], Optional[Graph]]:
+        """Returns (plan, selected_graph); graph may be None (plan-only)."""
+        if not self.disk:
+            return None, None
+        pj, pg = self._paths(key)
+        try:
+            plan = CachePlan.from_json(json.loads(pj.read_text()))
+        except (OSError, ValueError, KeyError):
+            return None, None
+        graph: Optional[Graph] = None
+        try:
+            with open(pg, "rb") as f:
+                graph = pickle.load(f)
+        except (OSError, pickle.PickleError, AttributeError):
+            graph = None
+        self.stats.disk_hits += 1
+        return plan, graph
+
+    def put_plan(self, key: CacheKey, plan: CachePlan,
+                 graph: Optional[Graph]) -> None:
+        if not self.disk:
+            return
+        self.stats.misses += 1
+        pj, pg = self._paths(key)
+        try:
+            self.root.mkdir(parents=True, exist_ok=True)
+            tmp = pj.with_suffix(".json.tmp")
+            tmp.write_text(json.dumps(plan.to_json()))
+            tmp.replace(pj)
+        except OSError:
+            return
+        if graph is not None:
+            try:
+                tmpg = pg.with_suffix(".pkl.tmp")
+                with open(tmpg, "wb") as f:
+                    pickle.dump(graph, f)
+                tmpg.replace(pg)
+            except (OSError, pickle.PickleError, TypeError,
+                    AttributeError):
+                pass  # plan-only entry: fusion reruns on a disk hit
+
+    def clear_memory(self) -> None:
+        self._kernels.clear()
+
+
+_DEFAULT: Optional[KernelCache] = None
+
+
+def default_cache() -> KernelCache:
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = KernelCache()
+    return _DEFAULT
+
+
+def reset_default_cache() -> None:
+    """Drop the process-wide cache object (tests)."""
+    global _DEFAULT
+    _DEFAULT = None

@@ -1,0 +1,254 @@
+"""The end-to-end compile driver: array/block program -> fusion ->
+snapshot + block-shape selection -> backend codegen -> cached callable.
+
+    kern = pipeline.compile(AP.attention_program(0.125),
+                            dims={"M": 2, "D": 2, "N": 4, "L": 2},
+                            backend="jax")
+    out = kern({"Q": Q, "KT": K, "VT": V.T})["O"]
+
+Backends:
+
+* ``"py"``     — the reference interpreter (``codegen_py.compile_py``);
+                 slow, numpy-level, the differential oracle.
+* ``"jax"``    — ``codegen_jax.compile_program`` under ``jax.jit``
+                 (vmap/scan lowering; runs everywhere, differentiable).
+* ``"pallas"`` — ``codegen_pallas.emit``: one real mega-kernel
+                 (``pallas_call``); interpret-mode off-TPU.  Requires
+                 ``blocks`` (per-dim block sizes).
+
+Every compiled kernel takes and returns **merged dense arrays** keyed by
+program input/output names, so all three backends are drop-in
+interchangeable — that is what the differential test harness exploits.
+
+Results are memoized in a two-level :class:`KernelCache` keyed by
+``(Graph.fingerprint(), dims, backend, blocks, fused)``: in-process hits
+return the existing jitted callable; on-disk hits skip fusion + selection
+and only re-lower.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, replace
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import selection as SEL
+from repro.core.fusion import FusionTrace, fuse
+from repro.core.graph import Graph
+from repro.pipeline import packing as P
+from repro.pipeline.cache import (CacheKey, CachePlan, KernelCache,
+                                  default_cache)
+
+BACKENDS = ("py", "jax", "pallas")
+
+
+@dataclass
+class CompiledKernel:
+    """A ready-to-run fused kernel plus its compilation provenance."""
+
+    key: CacheKey
+    backend: str
+    graph: Graph                      # the selected snapshot
+    dims: Dict[str, int]
+    blocks: Optional[Dict[str, int]]
+    snapshot_index: int
+    cost: float                       # predicted traffic cost (selected)
+    initial_cost: float               # same model on the unfused program
+    cache_hit: Optional[str]          # None | "memory" | "disk"
+    in_names: List[str]
+    out_names: List[str]
+    _fn: Callable[[Dict[str, Any]], Dict[str, Any]] = None  # type: ignore
+
+    def __call__(self, inputs: Dict[str, Any]) -> Dict[str, Any]:
+        missing = [n for n in self.in_names if n not in inputs]
+        if missing:
+            raise KeyError(f"missing kernel inputs {missing}; "
+                           f"expected {self.in_names}")
+        return self._fn(inputs)
+
+    @property
+    def predicted_traffic_reduction(self) -> float:
+        return self.initial_cost / max(self.cost, 1e-30)
+
+
+def _io_info(g: Graph):
+    in_info = [(g.nodes[i].name, g.nodes[i].vtype) for i in g.input_ids]
+    out_info = [(g.nodes[o].name, vt)
+                for o, vt in zip(g.output_ids, P.output_types(g))]
+    return in_info, out_info
+
+
+def _lower_py(g: Graph, dims: Dict[str, int]):
+    from repro.core.codegen_py import compile_py
+    in_info, out_info = _io_info(g)
+    prog = compile_py(g, dims)
+
+    def call(inputs: Dict[str, Any]) -> Dict[str, Any]:
+        nested = {nm: P.to_nested(np.asarray(inputs[nm]), vt, dims)
+                  for nm, vt in in_info}
+        outs = prog(nested)
+        return {nm: P.from_nested(outs[nm], vt, dims)
+                for nm, vt in out_info}
+
+    return call
+
+
+def _lower_jax(g: Graph, dims: Dict[str, int], jit: bool):
+    import jax
+    from repro.core.codegen_jax import compile_program
+    in_info, out_info = _io_info(g)
+    prog = compile_program(g)
+
+    def fn(*merged):
+        stacked = [P.to_stacked(a, vt, dims)
+                   for (_, vt), a in zip(in_info, merged)]
+        outs = prog(*stacked)
+        return tuple(P.from_stacked(o, vt, dims)
+                     for (_, vt), o in zip(out_info, outs))
+
+    if jit:
+        fn = jax.jit(fn)
+
+    def call(inputs: Dict[str, Any]) -> Dict[str, Any]:
+        outs = fn(*[inputs[nm] for nm, _ in in_info])
+        return {nm: o for (nm, _), o in zip(out_info, outs)}
+
+    return call
+
+
+def _lower_pallas(candidates: Sequence[Graph], dims: Dict[str, int],
+                  blocks: Optional[Dict[str, int]], interpret: bool):
+    from repro.core.codegen_pallas import emit
+    if blocks is None:
+        raise ValueError(
+            "backend='pallas' needs per-dim block sizes: pass blocks=")
+    missing = [d for d in dims if d not in blocks]
+    if missing:
+        raise ValueError(f"blocks missing sizes for dims {missing}")
+    last_err: Optional[Exception] = None
+    for i, cand in enumerate(candidates):
+        try:
+            f = emit(cand, dims, blocks, interpret=interpret)
+        except ValueError as err:  # not a single-map-spine program
+            last_err = err
+            continue
+        in_info, out_info = _io_info(cand)
+
+        def call(inputs: Dict[str, Any], _f=f, _in=in_info,
+                 _out=out_info) -> Dict[str, Any]:
+            out = _f(*[inputs[nm] for nm, _ in _in])
+            return {_out[0][0]: out}
+
+        return call, i
+    raise ValueError(
+        f"no fusion snapshot lowers to a Pallas kernel: {last_err}")
+
+
+def compile(graph: Graph, dims: Optional[Dict[str, int]] = None, *,
+            backend: str = "jax",
+            blocks: Optional[Dict[str, int]] = None,
+            dim_candidates: Optional[Dict[str, Sequence[int]]] = None,
+            item_bytes: Optional[Dict[str, int]] = None,
+            fused: bool = True,
+            interpret=None,
+            jit: bool = True,
+            cache: Optional[KernelCache] = None) -> CompiledKernel:
+    """Compile a block program into an executing, cached kernel.
+
+    Either ``dims`` (fixed block counts -> ``selection.select``) or
+    ``dim_candidates`` (a per-dim sweep -> ``selection.autotune``, which
+    also picks the dims) must be given.  ``fused=False`` skips the fusion
+    algorithm — the unfused Table-2 program compiles as-is; that is the
+    benchmark baseline.
+    """
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
+    if dims is None and dim_candidates is None:
+        raise ValueError("pass dims= (fixed) or dim_candidates= (autotune)")
+    cache = cache if cache is not None else default_cache()
+
+    # autotune keys embed the full candidate sweep, so two sweeps over the
+    # same dim names but different candidate sets never collide
+    key_dims = (dims if dims is not None
+                else {k: tuple(v) for k, v in dim_candidates.items()})
+    # every option that changes the emitted kernel or the selection plan
+    # is part of the key, else a later compile is served a stale kernel
+    opts: tuple = ()
+    if backend == "jax":
+        opts += (("jit", bool(jit)),)
+    if backend == "pallas":
+        from repro.core.codegen_pallas import resolve_interpret
+        interpret = resolve_interpret(interpret)
+        opts += (("interpret", interpret),)
+    if item_bytes:
+        opts += (("item_bytes", tuple(sorted(item_bytes.items()))),)
+    key = CacheKey.make(graph.fingerprint(), backend, key_dims, blocks,
+                        fused, opts)
+    hit = cache.get_kernel(key)
+    if hit is not None:
+        return replace(hit, cache_hit="memory")
+
+    plan, selected_graph = cache.get_plan(key)
+    snaps: Optional[List[Graph]] = None
+    if plan is None:
+        # -- the full pipeline: fuse -> select/autotune --------------------
+        if fused:
+            trace = FusionTrace()
+            snaps = fuse(graph, trace)
+        else:
+            snaps = [graph.clone()]
+        if dim_candidates is not None:
+            sel = SEL.autotune(graph, dim_candidates, item_bytes,
+                               snapshots=snaps)
+        else:
+            sel = SEL.select(graph, dims, item_bytes, snapshots=snaps)
+        plan = CachePlan(sel.snapshot_index, sel.dims, sel.cost,
+                         sel.costs, SEL.snapshot_cost(graph, sel.dims,
+                                                      item_bytes))
+        selected_graph = snaps[sel.snapshot_index]
+        cache.put_plan(key, plan, selected_graph)
+        cache_hit = None
+    else:
+        cache_hit = "disk"
+        if selected_graph is None:
+            # plan-only disk entry (un-picklable graph): re-fuse
+            snaps = fuse(graph) if fused else [graph.clone()]
+            selected_graph = snaps[plan.snapshot_index]
+
+    use_dims = plan.dims
+
+    # -- backend lowering ---------------------------------------------------
+    snapshot_index = plan.snapshot_index
+    cost = plan.cost
+    if backend == "py":
+        fn = _lower_py(selected_graph, use_dims)
+    elif backend == "jax":
+        fn = _lower_jax(selected_graph, use_dims, jit)
+    else:  # pallas: prefer the selected snapshot, fall back to the most
+        # fused candidates (emit needs a single-map spine)
+        if snaps is None:
+            snaps = fuse(graph) if fused else [graph.clone()]
+        cands = [selected_graph] + [s for s in reversed(snaps)
+                                    if s is not selected_graph]
+        fn, ci = _lower_pallas(cands, use_dims, blocks, interpret)
+        if ci > 0:
+            selected_graph = cands[ci]
+            snapshot_index = next(
+                (i for i, s in enumerate(snaps) if s is selected_graph),
+                snapshot_index)
+            # report the cost of the snapshot that actually lowered, not
+            # the one selection wanted but emit rejected
+            cost = SEL.snapshot_cost(selected_graph, use_dims, item_bytes)
+
+    in_info, out_info = _io_info(selected_graph)
+    kern = CompiledKernel(
+        key=key, backend=backend, graph=selected_graph, dims=dict(use_dims),
+        blocks=dict(blocks) if blocks else None,
+        snapshot_index=snapshot_index, cost=cost,
+        initial_cost=plan.initial_cost, cache_hit=cache_hit,
+        in_names=[n for n, _ in in_info],
+        out_names=[n for n, _ in out_info], _fn=fn)
+    cache.put_kernel(key, kern)
+    return kern

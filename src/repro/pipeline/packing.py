@@ -1,0 +1,108 @@
+"""Layout conversion between the three value representations the pipeline
+backends speak:
+
+* **merged**  — one dense array per program value; the i-th blocked dim of
+  its VType splits the i-th array axis (``block[M,D]`` of shape
+  ``(M*bm, D*bd)``).  This is the public calling convention of every
+  compiled kernel and the layout the Pallas backend consumes directly.
+* **stacked** — one leading axis per list level (``(M, D, bm, bd)``), the
+  layout ``codegen_jax`` lowers to (vmap/scan axes).
+* **nested**  — nested python lists of item arrays, the interpreter's
+  native layout (``codegen_py`` backend).
+
+All merged<->stacked conversions are pure reshape/transpose, so they are
+jnp-traceable and fuse away under jit.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Sequence
+
+import numpy as np
+
+from repro.core.graph import Graph, VType
+
+_ITEM_NDIM = {"block": 2, "vector": 1, "scalar": 0}
+
+
+def block_shape(merged_shape: Sequence[int], vt: VType,
+                dims: Dict[str, int]) -> Dict[str, int]:
+    """Infer per-dim block sizes from a merged array's shape."""
+    out = {}
+    for i, d in enumerate(vt.dims):
+        n = dims[d]
+        if merged_shape[i] % n:
+            raise ValueError(
+                f"axis {i} of size {merged_shape[i]} not divisible by "
+                f"{n} blocks of dim {d}")
+        out[d] = merged_shape[i] // n
+    return out
+
+
+def to_stacked(arr, vt: VType, dims: Dict[str, int]):
+    """merged -> stacked: split the first len(dims) axes into
+    (count, block) pairs and hoist the counts to the front."""
+    n = len(vt.dims)
+    if n == 0:
+        return arr
+    shape: List[int] = []
+    for i, d in enumerate(vt.dims):
+        c = dims[d]
+        if arr.shape[i] % c:
+            raise ValueError(
+                f"cannot split axis {i} (size {arr.shape[i]}) of {vt!r} "
+                f"into {c} blocks")
+        shape += [c, arr.shape[i] // c]
+    shape += list(arr.shape[n:])
+    r = arr.reshape(shape)
+    perm = ([2 * i for i in range(n)] + [2 * i + 1 for i in range(n)]
+            + list(range(2 * n, r.ndim)))
+    return r.transpose(perm)
+
+
+def from_stacked(arr, vt: VType, dims: Dict[str, int]):
+    """stacked -> merged (inverse of ``to_stacked``)."""
+    n = len(vt.dims)
+    if n == 0:
+        return arr
+    # axes: [c0..c{n-1}, b0..b{n-1}, rest] -> interleave then merge pairs
+    perm: List[int] = []
+    for i in range(n):
+        perm += [i, n + i]
+    perm += list(range(2 * n, arr.ndim))
+    r = arr.transpose(perm)
+    shape = [r.shape[2 * i] * r.shape[2 * i + 1] for i in range(n)]
+    shape += list(r.shape[2 * n:])
+    return r.reshape(shape)
+
+
+def to_nested(arr, vt: VType, dims: Dict[str, int]) -> Any:
+    """merged -> nested python lists of numpy item arrays."""
+    st = np.asarray(to_stacked(np.asarray(arr), vt, dims))
+
+    def rec(a, depth):
+        if depth == 0:
+            return a
+        return [rec(a[i], depth - 1) for i in range(a.shape[0])]
+
+    return rec(st, len(vt.dims))
+
+
+def from_nested(val, vt: VType, dims: Dict[str, int]):
+    """nested python lists -> merged numpy array."""
+    def rec(v, depth):
+        if depth == 0:
+            return np.asarray(v)
+        return np.stack([rec(x, depth - 1) for x in v], axis=0)
+
+    return from_stacked(rec(val, len(vt.dims)), vt, dims)
+
+
+def output_types(g: Graph) -> List[VType]:
+    """VType of each program output (the type at its feeding edge)."""
+    types = g.infer_types()
+    out = []
+    for oid in g.output_ids:
+        e = g.in_edge(oid, 0)
+        out.append(types[(e.src, e.sp)])
+    return out

@@ -1,0 +1,111 @@
+"""Golden fusion-trace regressions.
+
+The paper's two flagship results — Flash Attention rediscovered
+(Example 1) and the RMSNorm+FFN-SwiGLU mega-kernel (Example 3) — are
+pinned as *exact ordered rule sequences*, not just counts: a rule-priority
+regression that still converges to a fused program (but via a different,
+possibly costlier route) fails loudly here instead of silently producing
+worse snapshots downstream of ``pipeline.compile``.
+"""
+
+from collections import Counter
+
+from repro.core import array_program as AP
+from repro.core.fusion import FusionTrace, fuse
+
+# Example 1: the paper's 17-step Flash Attention derivation.
+GOLDEN_ATTENTION_TRACE = [
+    "rule1_fuse_consecutive_maps",
+    "rule1_fuse_consecutive_maps",
+    "rule1_fuse_consecutive_maps",
+    "rule1_fuse_consecutive_maps",
+    "rule1_fuse_consecutive_maps",
+    "rule1_fuse_consecutive_maps",
+    "rule4_swap_scale_dot",
+    "rule3_fuse_map_reduction",
+    "rule1_fuse_consecutive_maps",
+    "rule1_fuse_consecutive_maps",
+    "rule1_fuse_consecutive_maps",
+    "rule1_fuse_consecutive_maps",
+    "rule3_fuse_map_reduction",
+    "rule9_fuse_consecutive_elementwise",
+    "rule3_fuse_map_reduction",
+    "rule6_extend_map",
+    "rule1_fuse_consecutive_maps",
+]
+
+# Example 3: the SwiGLU mega-kernel (27 steps: Rule-8 duplication, two
+# linearity swaps, two sibling fusions, two map extensions).
+GOLDEN_SWIGLU_TRACE = [
+    "rule1_fuse_consecutive_maps",
+    "rule1_fuse_consecutive_maps",
+    "rule1_fuse_consecutive_maps",
+    "rule1_fuse_consecutive_maps",
+    "rule1_fuse_consecutive_maps",
+    "rule1_fuse_consecutive_maps",
+    "rule1_fuse_consecutive_maps",
+    "rule1_fuse_consecutive_maps",
+    "rule8_duplicate_mapped_scale",
+    "rule4_swap_scale_dot",
+    "rule4_swap_scale_dot",
+    "rule3_fuse_map_reduction",
+    "rule1_fuse_consecutive_maps",
+    "rule1_fuse_consecutive_maps",
+    "rule1_fuse_consecutive_maps",
+    "rule1_fuse_consecutive_maps",
+    "rule1_fuse_consecutive_maps",
+    "rule1_fuse_consecutive_maps",
+    "rule3_fuse_map_reduction",
+    "rule9_fuse_consecutive_elementwise",
+    "rule3_fuse_map_reduction",
+    "rule3_fuse_map_reduction",
+    "rule2_fuse_sibling_maps",
+    "rule6_extend_map",
+    "rule1_fuse_consecutive_maps",
+    "rule6_extend_map",
+    "rule2_fuse_sibling_maps",
+]
+
+
+def _trace(graph):
+    t = FusionTrace()
+    fuse(graph, t)
+    return [r for r, _ in t.steps]
+
+
+def test_flash_attention_golden_trace():
+    got = _trace(AP.attention_program(0.125))
+    assert len(got) == 17, got  # the paper's step count
+    assert got == GOLDEN_ATTENTION_TRACE, got
+
+
+def test_swiglu_megakernel_golden_trace():
+    got = _trace(AP.rmsnorm_ffn_swiglu_program(512.0))
+    assert got == GOLDEN_SWIGLU_TRACE, got
+
+
+def test_golden_rule_counts():
+    """Counts, separately from order, for a friendlier failure signal."""
+    att = Counter(_trace(AP.attention_program(0.125)))
+    assert att == Counter({"rule1_fuse_consecutive_maps": 11,
+                           "rule4_swap_scale_dot": 1,
+                           "rule3_fuse_map_reduction": 3,
+                           "rule9_fuse_consecutive_elementwise": 1,
+                           "rule6_extend_map": 1})
+    swi = Counter(_trace(AP.rmsnorm_ffn_swiglu_program(512.0)))
+    assert swi == Counter({"rule1_fuse_consecutive_maps": 15,
+                           "rule8_duplicate_mapped_scale": 1,
+                           "rule4_swap_scale_dot": 2,
+                           "rule3_fuse_map_reduction": 4,
+                           "rule9_fuse_consecutive_elementwise": 1,
+                           "rule2_fuse_sibling_maps": 2,
+                           "rule6_extend_map": 2})
+
+
+def test_golden_trace_independent_of_constants():
+    """The trace depends on program *structure* only, never on the baked
+    scale constants (selection owns shapes; fusion owns structure)."""
+    assert _trace(AP.attention_program(0.125)) == \
+        _trace(AP.attention_program(0.99))
+    assert _trace(AP.rmsnorm_ffn_swiglu_program(512.0)) == \
+        _trace(AP.rmsnorm_ffn_swiglu_program(64.0, eps=1e-6))

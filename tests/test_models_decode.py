@@ -11,6 +11,8 @@ import pytest
 from repro.configs import get_reduced_config
 from repro.models import build_model
 
+pytestmark = pytest.mark.slow  # per-arch prefill/decode loops: not tier-1
+
 CASES = ["smollm-135m", "deepseek-v3-671b", "mamba2-2.7b",
          "jamba-1.5-large-398b"]
 

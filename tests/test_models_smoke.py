@@ -11,6 +11,8 @@ import pytest
 from repro.configs import ARCHS, get_reduced_config
 from repro.models import build_model
 
+pytestmark = pytest.mark.slow  # full-zoo forward+backward: not tier-1
+
 ALL_ARCHS = sorted(ARCHS)
 
 

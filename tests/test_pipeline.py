@@ -1,0 +1,235 @@
+"""Differential test harness for ``pipeline.compile``.
+
+For every paper example program and every backend (py / jax /
+pallas-interpret), the compiled kernel must agree with (a) the dense
+numpy reference and (b) the block-program interpreter oracle — all
+backends consume the same merged dense arrays, so a single harness covers
+the whole matrix.  Cache behavior (in-process hits, cross-process disk
+hits) and fingerprint stability are pinned here too.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import pipeline
+from repro.core import array_program as AP
+from repro.core.blocks import merge
+from repro.core.interpreter import run as interp_run
+from repro.pipeline import packing as P
+
+BACKENDS = ["py", "jax", "pallas"]
+
+# block sizes matching the conftest cases (merged arrays are rebuilt from
+# the same nested-block inputs the interpreter consumes)
+CASE_BLOCKS = {
+    "attention": {"M": 8, "D": 16, "N": 8, "L": 16},
+    "layernorm": {"M": 8, "K": 8, "N": 16},
+    "swiglu": {"M": 8, "D": 8, "K": 8, "N": 8},
+}
+
+
+@pytest.fixture()
+def cache(tmp_path):
+    return pipeline.KernelCache(tmp_path)
+
+
+def _get_case(name, attention_case, layernorm_case, swiglu_case):
+    return {"attention": attention_case, "layernorm": layernorm_case,
+            "swiglu": swiglu_case}[name]
+
+
+def _merged_inputs(case):
+    """Rebuild dense merged arrays from the case's nested block inputs."""
+    out = {}
+    for nid in case.graph.input_ids:
+        node = case.graph.nodes[nid]
+        out[node.name] = P.from_nested(
+            case.inputs[node.name], node.vtype, case.dims
+        ).astype(np.float32)
+    return out
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("case_name", ["attention", "layernorm", "swiglu"])
+def test_pipeline_differential(case_name, backend, cache, attention_case,
+                               layernorm_case, swiglu_case):
+    """pipeline.compile output == numpy reference == interpreter oracle,
+    for all three examples on all three backends."""
+    case = _get_case(case_name, attention_case, layernorm_case, swiglu_case)
+    kern = pipeline.compile(case.graph, case.dims, backend=backend,
+                            blocks=CASE_BLOCKS[case_name], cache=cache)
+    assert kern.cache_hit is None  # fresh compile
+    got = np.asarray(kern(_merged_inputs(case))[case.out_name])
+
+    # (a) dense numpy reference
+    np.testing.assert_allclose(got, case.ref, rtol=2e-4, atol=2e-4)
+    # (b) interpreter oracle on the ORIGINAL (unfused) program
+    oracle = merge(interp_run(case.graph, case.inputs, case.dims)
+                   [case.out_name])
+    np.testing.assert_allclose(got, oracle, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("case_name", ["attention", "layernorm", "swiglu"])
+def test_pipeline_second_compile_is_cache_hit(case_name, backend, cache,
+                                              attention_case,
+                                              layernorm_case, swiglu_case):
+    case = _get_case(case_name, attention_case, layernorm_case, swiglu_case)
+    blocks = CASE_BLOCKS[case_name]
+    k1 = pipeline.compile(case.graph, case.dims, backend=backend,
+                          blocks=blocks, cache=cache)
+    k2 = pipeline.compile(case.graph, case.dims, backend=backend,
+                          blocks=blocks, cache=cache)
+    assert k1.cache_hit is None and k2.cache_hit == "memory"
+    assert k2._fn is k1._fn  # the jitted callable is reused, not rebuilt
+    assert cache.stats.memory_hits >= 1
+
+
+def test_pipeline_disk_cache_survives_process_boundary(tmp_path,
+                                                       attention_case):
+    """A fresh KernelCache over the same directory (== a new process)
+    loads the plan + selected snapshot from disk: no fusion rerun."""
+    case = attention_case
+    c1 = pipeline.KernelCache(tmp_path)
+    k1 = pipeline.compile(case.graph, case.dims, backend="jax", cache=c1)
+    assert k1.cache_hit is None
+
+    c2 = pipeline.KernelCache(tmp_path)
+    k2 = pipeline.compile(case.graph, case.dims, backend="jax", cache=c2)
+    assert k2.cache_hit == "disk"
+    assert k2.snapshot_index == k1.snapshot_index
+    assert k2.dims == k1.dims and k2.cost == k1.cost
+    got = np.asarray(k2(_merged_inputs(case))[case.out_name])
+    np.testing.assert_allclose(got, case.ref, rtol=2e-4, atol=2e-4)
+
+
+def test_pipeline_unfused_baseline_matches(cache, layernorm_case):
+    """fused=False compiles the raw Table-2 program; same numerics, its
+    key never collides with the fused kernel's."""
+    case = layernorm_case
+    kf = pipeline.compile(case.graph, case.dims, backend="jax", cache=cache)
+    ku = pipeline.compile(case.graph, case.dims, backend="jax", fused=False,
+                          cache=cache)
+    assert ku.key != kf.key and ku.cache_hit is None
+    assert ku.cost >= kf.cost  # fusion can only cut predicted traffic
+    got = np.asarray(ku(_merged_inputs(case))[case.out_name])
+    np.testing.assert_allclose(got, case.ref, rtol=2e-4, atol=2e-4)
+
+
+def test_pipeline_autotune_selects_dims(cache, layernorm_case):
+    case = layernorm_case
+    kern = pipeline.compile(
+        case.graph, backend="jax",
+        dim_candidates={"M": [1, 3], "K": [2, 4], "N": [1, 2]},
+        cache=cache)
+    assert set(kern.dims) == {"M", "K", "N"}
+    assert kern.cost <= kern.initial_cost
+
+
+def test_cache_key_covers_kernel_affecting_options(cache, layernorm_case):
+    """Options that change the emitted kernel (jit) or the selection plan
+    (item_bytes) must key separately — no stale-kernel serving."""
+    case = layernorm_case
+    k1 = pipeline.compile(case.graph, case.dims, backend="jax", cache=cache)
+    k2 = pipeline.compile(case.graph, case.dims, backend="jax", jit=False,
+                          cache=cache)
+    assert k2.key != k1.key and k2.cache_hit is None
+    k3 = pipeline.compile(case.graph, case.dims, backend="jax",
+                          item_bytes={"block": 1, "vector": 1, "scalar": 1},
+                          cache=cache)
+    assert k3.key != k1.key and k3.cache_hit is None
+
+
+def test_fingerprint_stable_and_discriminating():
+    a1 = AP.attention_program(0.125)
+    a2 = AP.attention_program(0.125)
+    assert a1.fingerprint() == a2.fingerprint()
+    # a different baked-in constant must change the fingerprint (else the
+    # kernel cache would serve a wrongly-scaled kernel)
+    assert AP.attention_program(0.5).fingerprint() != a1.fingerprint()
+    assert AP.layernorm_matmul_program(64.0).fingerprint() != \
+        a1.fingerprint()
+    # fusion output is deterministic, so fingerprints of snapshots agree
+    from repro.core.fusion import fuse
+    assert fuse(a1)[-1].fingerprint() == fuse(a2)[-1].fingerprint()
+    # and differs from the unfused program's
+    assert fuse(a1)[-1].fingerprint() != a1.fingerprint()
+
+
+def test_pipeline_rejects_bad_calls(cache, attention_case):
+    case = attention_case
+    with pytest.raises(ValueError):
+        pipeline.compile(case.graph, case.dims, backend="nope", cache=cache)
+    with pytest.raises(ValueError):
+        pipeline.compile(case.graph, backend="jax", cache=cache)  # no dims
+    with pytest.raises(ValueError):  # pallas needs block sizes
+        pipeline.compile(case.graph, case.dims, backend="pallas",
+                         cache=cache)
+    kern = pipeline.compile(case.graph, case.dims, backend="jax",
+                            cache=cache)
+    with pytest.raises(KeyError):
+        kern({"Q": np.zeros((16, 32))})  # missing inputs
+
+
+def test_model_layers_execute_through_pipeline(monkeypatch, tmp_path):
+    """The flag-gated model path: cfg.mlp_impl/attn_impl == "pipeline"
+    routes the SwiGLU MLP and (non-causal) attention through
+    pipeline.compile and matches the unfused reference layers."""
+    import jax
+    import jax.numpy as jnp
+
+    monkeypatch.setenv("REPRO_KERNEL_CACHE", str(tmp_path))
+    pipeline.reset_default_cache()
+    from repro.models import layers as L
+    from repro.models.common import ModelConfig, ParamBuilder
+
+    cfg = ModelConfig(d_model=64, n_heads=2, n_kv_heads=2, d_head=32,
+                      d_ff=128, dtype=jnp.float32, norm_eps=1e-6)
+    cfg_ref = dataclasses.replace(cfg, mlp_impl="unfused", attn_impl="ref",
+                                  rope_theta=0.0)
+    cfg_pipe = dataclasses.replace(cfg, mlp_impl="pipeline",
+                                   attn_impl="pipeline",
+                                   pipeline_backend="jax", rope_theta=0.0)
+    pb = ParamBuilder(jax.random.PRNGKey(0), jnp.float32)
+    L.init_swiglu(pb, cfg, cfg.d_ff)
+    L.init_attention(pb, cfg)
+    p = pb.params
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 64), jnp.float32)
+    gamma = jnp.full((64,), 1.3, jnp.float32)
+
+    ref = L.rmsnorm_swiglu_apply(p, x, gamma, cfg_ref)
+    got = L.rmsnorm_swiglu_apply(p, x, gamma, cfg_pipe)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    # ... and under jit (compile happens at trace time, cached after)
+    jit_got = jax.jit(
+        lambda xx: L.rmsnorm_swiglu_apply(p, xx, gamma, cfg_pipe))(x)
+    np.testing.assert_allclose(np.asarray(jit_got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+    a_ref = L.attention_apply(p, x, cfg_ref, causal=False)
+    a_got = L.attention_apply(p, x, cfg_pipe, causal=False)
+    np.testing.assert_allclose(np.asarray(a_got), np.asarray(a_ref),
+                               rtol=2e-5, atol=2e-5)
+    # causal attention falls back to the XLA flash path, still correct
+    c_ref = L.attention_apply(p, x, cfg_ref, causal=True)
+    c_got = L.attention_apply(p, x, cfg_pipe, causal=True)
+    np.testing.assert_allclose(np.asarray(c_got), np.asarray(c_ref),
+                               rtol=2e-5, atol=2e-5)
+    pipeline.reset_default_cache()
+
+
+def test_packing_roundtrip(rng):
+    from repro.core.graph import VType
+    arr = rng.normal(size=(12, 20)).astype(np.float32)
+    vt = VType(("M", "N"), "block")
+    dims = {"M": 3, "N": 4}
+    st = P.to_stacked(arr, vt, dims)
+    assert st.shape == (3, 4, 4, 5)
+    np.testing.assert_array_equal(P.from_stacked(st, vt, dims), arr)
+    nested = P.to_nested(arr, vt, dims)
+    assert isinstance(nested, list) and isinstance(nested[0], list)
+    np.testing.assert_array_equal(nested[1][2], arr[4:8, 10:15])
+    np.testing.assert_array_equal(P.from_nested(nested, vt, dims), arr)

@@ -7,7 +7,11 @@ arbitrary block decompositions.
 """
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional hypothesis dep")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import array_program as AP
 from repro.core import blocks as B

@@ -8,6 +8,8 @@ import pytest
 
 from repro.launch import train as T
 
+pytestmark = pytest.mark.slow  # multi-step train loops: not tier-1
+
 
 def test_train_loss_decreases(tmp_path):
     out = T.main(["--arch", "smollm-135m", "--reduced", "--steps", "60",
