@@ -25,6 +25,11 @@ ITEM_BYTES = {"block": 128 * 128 * 4, "vector": 128 * 4, "scalar": 4}
 EXAMPLES = {
     "attention": (lambda: AP.attention_program(0.125),
                   {"M": 8, "D": 4, "N": 16, "L": 4}),
+    # decoder prefill: M == N tile the same sequence; the mask-aware cost
+    # model skips fully-masked tiles, so predicted traffic is ~(N+1)/2N
+    # of the non-causal program's
+    "causal_attention": (lambda: AP.causal_attention_program(0.125),
+                         {"M": 16, "D": 4, "N": 16, "L": 4}),
     "layernorm_matmul": (lambda: AP.layernorm_matmul_program(512.0),
                          {"M": 8, "K": 16, "N": 8}),
     "rmsnorm_ffn_swiglu": (lambda: AP.rmsnorm_ffn_swiglu_program(512.0),
@@ -66,8 +71,11 @@ def _random_inputs(g, dims: Dict[str, int], bs: int, rng) -> Dict:
     for nid in g.input_ids:
         node = g.nodes[nid]
         shape = tuple(dims[d] * bs for d in node.vtype.dims)
-        out[node.name] = (rng.normal(size=shape)
-                          / max(shape[-1], 1) ** 0.5).astype(np.float32)
+        if node.name in ("QP", "KP"):  # global positions, not data
+            out[node.name] = np.arange(shape[0], dtype=np.float32)
+        else:
+            out[node.name] = (rng.normal(size=shape)
+                              / max(shape[-1], 1) ** 0.5).astype(np.float32)
     return out
 
 

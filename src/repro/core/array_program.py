@@ -201,6 +201,33 @@ class ArrayProgramBuilder:
         irms = self.reduce_rows(s, f"1/sqrt(a0/DD + {float(eps)!r})", DD=dd)
         return self.row_apply(O.ROW_SCALE, x, irms)
 
+    def causal_mask(self, s: AVal, qp: AVal, kp: AVal) -> AVal:
+        """Causally mask an (M, N)-blocked score matrix.
+
+        ``qp`` is an (M,)-list of per-row-block global position vectors,
+        ``kp`` an (N,)-list of per-column-block position vectors.  Table-2
+        style expansion: Map_M{ Map_N{ causal_mask } } with the row
+        positions mapped over M (broadcast into N) and the column
+        positions broadcast into M (mapped over N)."""
+        m_dim, n_dim = s.dims
+        assert qp.dims == (m_dim,) and kp.dims == (n_dim,), (qp.dims,
+                                                             kp.dims)
+        gn = GB()
+        sb = gn.inp("s", VType((), O.BLOCK))
+        qv = gn.inp("q", VType((), O.VECTOR))
+        kv = gn.inp("k", VType((), O.VECTOR))
+        gn.out("o", gn.func(O.CAUSAL_MASK, sb, qv, kv))
+        gm = GB()
+        srow = gm.inp("s", VType((n_dim,), O.BLOCK))
+        qv_m = gm.inp("q", VType((), O.VECTOR))
+        kl = gm.inp("k", VType((n_dim,), O.VECTOR))
+        outs = gm.map(n_dim, gn.g, [(srow, True), (qv_m, False),
+                                    (kl, True)])
+        gm.out("o", outs[0])
+        top = self.b.map(m_dim, gm.g, [(s.ref, True), (qp.ref, True),
+                                       (kp.ref, False)])
+        return AVal(top[0], s.dims)
+
     def swish(self, x: AVal) -> AVal:
         return self.elementwise("a0/(1+exp(-a0))", x)
 
@@ -230,6 +257,64 @@ def attention_program(scale: float) -> Graph:
     o = ap.matmul_t(p, vt, out_dim="L")
     ap.output("O", o)
     return ap.build()
+
+
+def causal_attention_program(scale: float) -> Graph:
+    """Causal (decoder) attention as a block program.
+
+    Inputs: Q blocked (M, D); K^T blocked (N, D); V^T blocked (L, N);
+    QP — (M,)-list of per-row-block global query-position vectors;
+    KP — (N,)-list of per-column-block key-position vectors.
+    Output: O blocked (M, L).
+
+    Masking happens *before* the scale so Rule 9 still composes the scale
+    into the exp (the flagship trace's elementwise fusion); masked scores
+    stay ``<= scale * NEG_MASK`` and exp to exactly 0.  A one-token decode
+    step is this same program with M = 1 block and QP = [write position].
+    """
+    assert scale > 0.0, "causal masking needs a positive logit scale"
+    ap = ArrayProgramBuilder()
+    q = ap.input("Q", ("M", "D"))
+    kt = ap.input("KT", ("N", "D"))
+    vt = ap.input("VT", ("L", "N"))
+    qp = ap.input("QP", ("M",), O.VECTOR)
+    kp = ap.input("KP", ("N",), O.VECTOR)
+    s = ap.matmul_t(q, kt, out_dim="N")
+    s = ap.causal_mask(s, qp, kp)
+    s = ap.scale_const(s, scale)
+    p = ap.softmax_rows(s)
+    o = ap.matmul_t(p, vt, out_dim="L")
+    ap.output("O", o)
+    g = ap.build()
+    g.causal_dims = {"N": "M"}
+    return g
+
+
+def gqa_attention_program(scale: float, causal: bool = False) -> Graph:
+    """Grouped-query attention: the attention body wrapped in a map over
+    the head-group dim H whose K/V (and position) ports are *broadcast* —
+    one K/V block set shared by every query head in the group, which is
+    exactly the head-group broadcast GQA buys.
+
+    Inputs: Q blocked (H, M, D); K^T (N, D); V^T (L, N); plus QP/KP when
+    ``causal``.  Output: O blocked (H, M, L)."""
+    inner = (causal_attention_program(scale) if causal
+             else attention_program(scale))
+    gb = GB()
+    q = gb.inp("Q", VType(("H", "M", "D"), O.BLOCK))
+    kt = gb.inp("KT", VType(("N", "D"), O.BLOCK))
+    vt = gb.inp("VT", VType(("L", "N"), O.BLOCK))
+    ins = [(q, True), (kt, False), (vt, False)]
+    if causal:
+        qp = gb.inp("QP", VType(("M",), O.VECTOR))
+        kp = gb.inp("KP", VType(("N",), O.VECTOR))
+        ins += [(qp, False), (kp, False)]
+    outs = gb.map("H", inner, ins)
+    gb.out("O", outs[0])
+    g = gb.g
+    g.causal_dims = dict(inner.causal_dims)
+    g.validate()
+    return g
 
 
 def layernorm_matmul_program(kk: float) -> Graph:

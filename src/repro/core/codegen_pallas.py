@@ -13,7 +13,12 @@ is the appendix's separate numerics pass, exactly as in the paper).
 
 Layout convention: an IR input typed ``block[A,B]`` is one merged array
 of shape (A*bA, B*bB); dims on the grid are tiled by BlockSpecs, other
-dims are whole-resident in VMEM and in-kernel loops slice them.
+dims are whole-resident in VMEM and in-kernel loops slice them.  A value
+with more list dims than item axes (``block[H,M,D]`` — the GQA
+head-group dim) carries the *leading* extra dims as plain stack axes of
+extent ``dims[d]`` (block size 1): on the grid they are selected by the
+BlockSpec and squeezed in-kernel; off the grid they unroll to an
+in-kernel list.
 """
 
 from __future__ import annotations
@@ -71,6 +76,22 @@ def _split_whole(arr, vt_dims, dims, grid_axes, axis=0):
         parts.append(_split_whole(arr[tuple(idx)], vt_dims[1:], dims,
                                   grid_axes, axis))
     return parts
+
+
+def _split_input(arr, vt: VType, dims, grid_axes):
+    """Lead-aware version of :func:`_split_whole` for a kernel input: the
+    leading stack axes (``VType.lead_dims``) are squeezed when
+    grid-selected, or unrolled into in-kernel lists otherwise."""
+    def rec(a, vt_dims, lead):
+        if lead:
+            d = vt_dims[0]
+            if d in grid_axes:
+                return rec(a[0], vt_dims[1:], lead - 1)
+            return [rec(a[i], vt_dims[1:], lead - 1)
+                    for i in range(dims[d])]
+        return _split_whole(a, list(vt_dims), dims, grid_axes)
+
+    return rec(arr, vt.dims, vt.lead_dims)
 
 
 def _eval_inner(g: Graph, env: Dict, dims: Dict[str, int]) -> List[Any]:
@@ -134,6 +155,17 @@ def emit(g: Graph, dims: Dict[str, int], blocks: Dict[str, int],
     in_names = [g.nodes[i].name for i in g.input_ids]
     in_types = [g.nodes[i].vtype for i in g.input_ids]
     n_red = dims[kp.red_dim]
+
+    out_types = g.infer_types()
+    oe = g.in_edge(g.output_ids[0], 0)
+    out_vt = out_types[(oe.src, oe.sp)]
+    out_lead = out_vt.lead_dims
+    for vt in in_types + [out_vt]:
+        for d in vt.dims[:vt.lead_dims]:
+            if blocks.get(d, 1) != 1:
+                raise ValueError(
+                    f"stack dim {d} of {vt!r} needs block size 1, got "
+                    f"{blocks[d]}")
 
     # locate the serial map and its containing level
     level = g
@@ -213,8 +245,7 @@ def emit(g: Graph, dims: Dict[str, int], blocks: Dict[str, int],
             for a in acc_refs:
                 a[...] = jnp.zeros_like(a)
 
-        values = {iid: _split_whole(r[...], list(vt.dims), dims,
-                                    grid_axes)
+        values = {iid: _split_input(r[...], vt, dims, grid_axes)
                   for iid, r, vt in zip(g.input_ids, in_refs, in_types)}
         partials = serial_step(values)
         for a, p_val in zip(acc_refs, partials):
@@ -223,7 +254,7 @@ def emit(g: Graph, dims: Dict[str, int], blocks: Dict[str, int],
         @pl.when(ri == n_red - 1)
         def _done():
             res = epilogue(values, [a[...] for a in acc_refs])
-            o_ref[...] = res.astype(o_ref.dtype)
+            o_ref[...] = res.reshape(o_ref.shape).astype(o_ref.dtype)
 
     # accumulator shapes via abstract evaluation of one serial step
     abstract_ins = [
@@ -233,7 +264,7 @@ def emit(g: Graph, dims: Dict[str, int], blocks: Dict[str, int],
         for vt in in_types]
 
     def one_step(*arrs):
-        values = {iid: _split_whole(a, list(vt.dims), dims, grid_axes)
+        values = {iid: _split_input(a, vt, dims, grid_axes)
                   for iid, a, vt in zip(g.input_ids, arrs, in_types)}
         return serial_step(values)
 
@@ -243,19 +274,22 @@ def emit(g: Graph, dims: Dict[str, int], blocks: Dict[str, int],
 
     out_block = jax.eval_shape(
         lambda arrs, accs: epilogue(
-            {iid: _split_whole(a, list(vt.dims), dims, grid_axes)
+            {iid: _split_input(a, vt, dims, grid_axes)
              for iid, a, vt in zip(g.input_ids, arrs, in_types)},
             list(accs)), tuple(abstract_ins), tuple(acc_shapes))
 
+    # leading stack dims of the output (head-group H) prepend size-1 axes
+    # to the epilogue's item block
+    out_block_shape = (1,) * out_lead + tuple(out_block.shape)
     grid = tuple(dims[d] for d in grid_axes)
     out_spec = pl.BlockSpec(
-        out_block.shape,
+        out_block_shape,
         lambda *gids: tuple(gids[:len(kp.grid_dims)])
-        + (0,) * (len(out_block.shape) - len(kp.grid_dims)))
+        + (0,) * (len(out_block_shape) - len(kp.grid_dims)))
     out_full = tuple(
         s * (dims[d] if i < len(kp.grid_dims) else 1)
         for i, (s, d) in enumerate(
-            zip(out_block.shape,
+            zip(out_block_shape,
                 kp.grid_dims + [kp.red_dim] * 8)))
 
     def wrapper(*merged_inputs):

@@ -15,6 +15,15 @@ instructions that the paper's listings contain:
 Also counts functional-operator applications (work; Rule 6 replicates work)
 and top-level operator count (kernel launches before candidate selection
 splits the program).
+
+Causal masking (``Graph.causal_dims`` maps a key-block dim to its
+query-block dim): a fully-masked tile is never loaded, computed, or
+stored — a map over a masked key dim nested inside its query dim iterates
+only the non-fully-masked tiles, so its trip count drops from ``N`` to
+the average ``sum_m ceil((m+1)*N/M) / M`` (``(N+1)/2`` when the two dims
+tile the sequence identically).  This is exactly the traffic win causal
+fusion buys, and it is what makes the cost model prefer the causal
+program's snapshots for decoder workloads.
 """
 
 from __future__ import annotations
@@ -43,12 +52,36 @@ class Traffic:
                 + sum(item_bytes.get(k, 0) * v for k, v in self.stores.items()))
 
 
-def _n_items(dims: Tuple[str, ...], sizes: Dict[str, int]) -> int:
-    return prod(sizes[d] for d in dims)
+def _causal_trips(q_count: int, k_count: int) -> float:
+    """Expected non-fully-masked key-block count per query block, assuming
+    both dims tile the same sequence uniformly.  Equals ``(k+1)/2`` when
+    ``q_count == k_count``; always ``<= k_count``."""
+    tot = 0
+    for m in range(q_count):
+        tot += min(k_count, -(-((m + 1) * k_count) // q_count))
+    return tot / q_count
+
+
+def _eff_count(dim: str, sizes: Dict[str, int], causal: Dict[str, str],
+               enclosing: frozenset):
+    """Trip count of ``dim``, discounted when it is causally masked
+    against an enclosing query dim (masked tiles are skipped)."""
+    q_dim = causal.get(dim)
+    if q_dim is not None and q_dim in enclosing:
+        return _causal_trips(sizes[q_dim], sizes[dim])
+    return sizes[dim]
+
+
+def _n_items(dims: Tuple[str, ...], sizes: Dict[str, int],
+             causal: Dict[str, str] = {},
+             enclosing: frozenset = frozenset()):
+    return prod(_eff_count(d, sizes, causal, enclosing) for d in dims)
 
 
 def _walk(g: Graph, in_types: Sequence[VType], in_global: Sequence[bool],
-          mult: int, sizes: Dict[str, int], t: Traffic, top: bool) -> None:
+          mult: float, sizes: Dict[str, int], t: Traffic, top: bool,
+          causal: Dict[str, str] = {},
+          enclosing: frozenset = frozenset()) -> None:
     types = g.infer_types(in_types)
     glob: Dict[Tuple[int, int], bool] = {}
     for nid, gl in zip(g.input_ids, in_global):
@@ -77,7 +110,8 @@ def _walk(g: Graph, in_types: Sequence[VType], in_global: Sequence[bool],
             if vt.is_list:
                 for e in cons:
                     if isinstance(g.nodes[e.dst], ReduceNode):
-                        t.loads[vt.item] += mult * _n_items(vt.dims, sizes)
+                        t.loads[vt.item] += mult * _n_items(
+                            vt.dims, sizes, causal, enclosing)
 
     if top:  # item-typed program outputs get a single store
         for oid in g.output_ids:
@@ -94,9 +128,10 @@ def _walk(g: Graph, in_types: Sequence[VType], in_global: Sequence[bool],
         elif isinstance(node, ReduceNode):
             e = g.in_edge(nid, 0)
             vt = types[(e.src, e.sp)]
-            t.work["reduce_add"] += mult * max(_n_items(vt.dims, sizes) - 1, 0)
+            t.work["reduce_add"] += mult * max(
+                _n_items(vt.dims, sizes, causal, enclosing) - 1, 0)
         elif isinstance(node, MapNode):
-            dim_n = sizes[node.dim]
+            dim_n = _eff_count(node.dim, sizes, causal, enclosing)
             inner_types: List[VType] = []
             inner_glob: List[bool] = []
             for p in range(node.n_in()):
@@ -118,13 +153,16 @@ def _walk(g: Graph, in_types: Sequence[VType], in_global: Sequence[bool],
                     # the list materializes here: one store per iteration
                     t.stores[ivt.item] += mult * dim_n
             _walk(node.inner, inner_types, inner_glob, mult * dim_n, sizes, t,
-                  top=False)
+                  top=False, causal=causal,
+                  enclosing=enclosing | {node.dim})
 
 
 def traffic(g: Graph, sizes: Dict[str, int]) -> Traffic:
     t = Traffic()
     in_types = [g.nodes[nid].vtype for nid in g.input_ids]
-    _walk(g, in_types, [True] * len(in_types), 1, sizes, t, top=True)
+    causal = dict(getattr(g, "causal_dims", None) or {})
+    _walk(g, in_types, [True] * len(in_types), 1, sizes, t, top=True,
+          causal=causal)
     t.launches = len(g.op_nodes())
     return t
 

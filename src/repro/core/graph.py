@@ -29,6 +29,9 @@ from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 from repro.core import ops as O
 
 
+_ITEM_NDIM = {O.BLOCK: 2, O.VECTOR: 1, O.SCALAR: 0}
+
+
 @dataclass(frozen=True)
 class VType:
     dims: Tuple[str, ...] = ()
@@ -37,6 +40,14 @@ class VType:
     @property
     def is_list(self) -> bool:
         return len(self.dims) > 0
+
+    @property
+    def lead_dims(self) -> int:
+        """Leading list dims beyond the item rank.  In the merged dense
+        layout (pipeline/packing.py) and the Pallas lowering these are
+        plain stack axes of extent ``dims[d]`` with block size 1 — e.g.
+        the GQA head-group dim of ``block[H,M,D]``."""
+        return max(len(self.dims) - _ITEM_NDIM[self.item], 0)
 
     def strip(self) -> "VType":
         return VType(self.dims[1:], self.item)
@@ -188,6 +199,11 @@ class Graph:
         self.edges: Set[Edge] = set()
         self.input_ids: List[int] = []
         self.output_ids: List[int] = []
+        # masking structure: {key_block_dim: query_block_dim} for every
+        # causal_mask in the program; the traffic cost model uses it to
+        # skip fully-masked tiles (they cost no loads, stores, or work).
+        # Survives fuse() (snapshots are deep clones of this graph).
+        self.causal_dims: Dict[str, str] = {}
         self._next = 0
 
     # -- construction -------------------------------------------------------
@@ -337,6 +353,9 @@ class Graph:
             parts.append(f"{renum[nid]}={lbl}<[{ins}]")
         io = ("I:" + ",".join(str(renum[i]) for i in self.input_ids)
               + ";O:" + ",".join(str(renum[o]) for o in self.output_ids))
+        if self.causal_dims:
+            io += ";C:" + ",".join(
+                f"{k}<{q}" for k, q in sorted(self.causal_dims.items()))
         return io + "|" + ";".join(parts)
 
     def fingerprint(self) -> str:

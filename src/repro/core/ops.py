@@ -135,6 +135,35 @@ class RowSum(Op):
         return a.sum(axis=1)
 
 
+# Large-negative fill for masked attention scores: survives a subsequent
+# scale multiply (scale * NEG_MASK is still << float32 min for exp) and
+# exp() maps it to exactly 0.0 in float32.
+NEG_MASK = -1e30
+
+
+class CausalMask(Op):
+    """r[i,j] = a[i,j] if rows[i] >= cols[j] else NEG_MASK.
+
+    ``rows`` / ``cols`` are per-row and per-column *global position*
+    vectors (they arrive as ordinary blocked program inputs, so the
+    query-block index reaches the masked score computation as data —
+    no special index plumbing in any backend).  A decode step is the
+    same op with a single row position equal to the cache write
+    position."""
+
+    name = "causal_mask"
+    n_in = 3
+
+    def result_kind(self, kinds):
+        assert kinds == (BLOCK, VECTOR, VECTOR), kinds
+        return BLOCK
+
+    def apply(self, xp, a, rows, cols):
+        rows = xp.asarray(rows)
+        cols = xp.asarray(cols)
+        return xp.where(rows[:, None] >= cols[None, :], a, NEG_MASK)
+
+
 _ARG_RE = re.compile(r"\ba(\d+)\b")
 
 
@@ -225,6 +254,7 @@ OUTER = Outer()
 ROW_SCALE = RowScale()
 ROW_SHIFT = RowShift()
 ROW_SUM = RowSum()
+CAUSAL_MASK = CausalMask()
 
 
 def ew(expr: str, n_in: int = 1, **consts) -> Elementwise:

@@ -54,16 +54,25 @@ def _pipeline_dims_blocks(sizes):
 
 
 @functools.lru_cache(maxsize=256)
-def _attention_kernel(s: int, dh: int, sk: int, dv: int, scale: float,
-                      backend: str):
-    """One compiled kernel per (shape, scale, backend); the lru_cache
-    skips graph reconstruction + fingerprinting on every forward call."""
+def _attention_kernel(s: int, dh: int, sk: int, dv: int, group: int,
+                      causal: bool, scale: float, backend: str):
+    """One compiled kernel per (shape, group, causal, scale, backend); the
+    lru_cache skips graph reconstruction + fingerprinting on every forward
+    call.  Query positions are kernel *data* (QP/KP inputs), so a decode
+    step at any cache position reuses the same compiled kernel."""
     from repro import pipeline as PL
     from repro.core import array_program as AP
     dims, blocks = _pipeline_dims_blocks(
         {"M": s, "D": dh, "N": sk, "L": dv})
-    return PL.compile(AP.attention_program(scale), dims, backend=backend,
-                      blocks=blocks)
+    if group > 1:
+        g = AP.gqa_attention_program(scale, causal=causal)
+        dims["H"] = group
+        blocks["H"] = 1  # the head-group dim is a stack axis
+    elif causal:
+        g = AP.causal_attention_program(scale)
+    else:
+        g = AP.attention_program(scale)
+    return PL.compile(g, dims, backend=backend, blocks=blocks)
 
 
 @functools.lru_cache(maxsize=256)
@@ -77,19 +86,39 @@ def _swiglu_kernel(t: int, d: int, d_ff: int, eps: float, backend: str):
         backend=backend, blocks=blocks)
 
 
-def _attention_pipeline(q, k, v, scale: float, backend: str) -> jax.Array:
-    """Non-causal attention through the fused pipeline: one compiled
-    kernel per (shape, backend), vmapped over batch and heads."""
-    kern = _attention_kernel(q.shape[2], q.shape[3], k.shape[2],
-                             v.shape[3], scale, backend)
+def _attention_pipeline(q, k, v, scale: float, backend: str, *,
+                        causal: bool = False, q_offset=0) -> jax.Array:
+    """Attention through the fused pipeline — causal or not, MHA or GQA.
+
+    One compiled kernel per (shape, group, causal, backend), vmapped over
+    batch and kv heads.  GQA runs the head-group block program (Q blocked
+    (H, M, D); K/V broadcast across the group).  Causal masking takes the
+    global query/key positions as kernel inputs, so decode (``q`` is one
+    token at cache position ``q_offset``) is the same program with M = 1
+    and needs no recompile as the position advances."""
+    b, hq, sq, dh = q.shape
+    _, hkv, skv, _ = k.shape
+    dv = v.shape[3]
+    group = hq // hkv
+    kern = _attention_kernel(sq, dh, skv, dv, group, causal, scale,
+                             backend)
+    pos_in = {}
+    if causal:
+        pos_in = {"QP": jnp.arange(sq, dtype=jnp.float32) + q_offset,
+                  "KP": jnp.arange(skv, dtype=jnp.float32)}
 
     def one(qh, kh, vh):
-        out = kern({"Q": qh.astype(jnp.float32),
-                    "KT": kh.astype(jnp.float32),
-                    "VT": vh.astype(jnp.float32).T})["O"]
-        return out
+        return kern({"Q": qh.astype(jnp.float32),
+                     "KT": kh.astype(jnp.float32),
+                     "VT": vh.astype(jnp.float32).T, **pos_in})["O"]
 
-    return jax.vmap(jax.vmap(one))(q, k, v).astype(q.dtype)
+    if group > 1:
+        qg = q.reshape(b, hkv, group, sq, dh)
+        o = jax.vmap(jax.vmap(one))(qg, k, v)      # (b, hkv, group, sq, dv)
+        o = o.reshape(b, hq, sq, dv)
+    else:
+        o = jax.vmap(jax.vmap(one))(q, k, v)
+    return o.astype(q.dtype)
 
 
 def _swiglu_pipeline(x2, wg, wu, wd, gamma, cfg: ModelConfig) -> jax.Array:
@@ -156,16 +185,18 @@ def attention_apply(p, x, cfg: ModelConfig, *, causal=True,
     if positions is None and cfg.rope_theta > 0:
         positions = jnp.arange(s)
     q, k, v = _qkv(p, x, cfg, positions)
-    if (cfg.attn_impl == "pipeline" and not causal
-            and cfg.n_kv_heads == cfg.n_heads):
-        # fusion-derived flash kernel (paper Example 1) via the pipeline
-        # driver; the non-causal, non-GQA case is what the block program
-        # expresses — everything else falls through to the XLA lowering.
+    if cfg.attn_impl == "pipeline":
+        # fusion-derived flash kernel via the pipeline driver — causal
+        # (decoder prefill) and GQA included; no XLA fallback.  Two
+        # hand-kernel knobs do not apply here: attn_p_half/unroll_scans
+        # belong to kernels/flash_attention.py.  The generated kernel
+        # uses the paper's raw-exp softmax (safe for |logit| < ~88; the
+        # appendix's online-softmax pass is a ROADMAP item for codegen —
+        # today run_stabilized implements it in the interpreter only).
         o = _attention_pipeline(q, k, v, 1.0 / cfg.d_head ** 0.5,
-                                cfg.pipeline_backend)
+                                cfg.pipeline_backend, causal=causal)
     else:
-        impl = "xla" if cfg.attn_impl == "pipeline" else cfg.attn_impl
-        o = K.flash_attention(q, k, v, causal=causal, impl=impl,
+        o = K.flash_attention(q, k, v, causal=causal, impl=cfg.attn_impl,
                               unroll=cfg.unroll_scans,
                               p_half=cfg.attn_p_half)
     o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.d_head)
@@ -194,14 +225,15 @@ def attention_decode(p, x, cache, pos, cfg: ModelConfig):
                                       (0, 0, pos, 0))
     cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
                                       (0, 0, pos, 0))
-    max_len = ck.shape[2]
     # mask positions beyond pos via the causal path with explicit offset
-    # (decode is causal by construction: the pipeline impl defers to xla)
-    o = K.flash_attention(q, ck, cv, causal=True,
-                          q_offset=pos,
-                          impl=("xla" if cfg.attn_impl == "pipeline"
-                                else cfg.attn_impl),
-                          unroll=cfg.unroll_scans)
+    if cfg.attn_impl == "pipeline":
+        o = _attention_pipeline(q, ck, cv, 1.0 / cfg.d_head ** 0.5,
+                                cfg.pipeline_backend, causal=True,
+                                q_offset=pos)
+    else:
+        o = K.flash_attention(q, ck, cv, causal=True, q_offset=pos,
+                              impl=cfg.attn_impl,
+                              unroll=cfg.unroll_scans)
     o = o.transpose(0, 2, 1, 3).reshape(b, 1, cfg.n_heads * cfg.d_head)
     return constrain(o @ p["wo"], "batch", None, None), {"k": ck, "v": cv}
 

@@ -8,12 +8,13 @@ benchmarks execute through this driver; it is the substrate later
 scaling work (sharding, batching, serving) compiles through.
 """
 
-from repro.pipeline.cache import (CacheKey, CachePlan, CacheStats,
-                                  KernelCache, default_cache,
+from repro.pipeline.cache import (CODEGEN_VERSION, CacheKey, CachePlan,
+                                  CacheStats, KernelCache, default_cache,
                                   reset_default_cache)
 from repro.pipeline.driver import BACKENDS, CompiledKernel, compile
 
 __all__ = [
-    "BACKENDS", "CacheKey", "CachePlan", "CacheStats", "CompiledKernel",
-    "KernelCache", "compile", "default_cache", "reset_default_cache",
+    "BACKENDS", "CODEGEN_VERSION", "CacheKey", "CachePlan", "CacheStats",
+    "CompiledKernel", "KernelCache", "compile", "default_cache",
+    "reset_default_cache",
 ]

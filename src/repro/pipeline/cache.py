@@ -10,9 +10,10 @@
   entries (fusion reruns, selection doesn't).
 
 Keys combine the graph fingerprint with every input that affects the
-emitted kernel: backend, dims, block shapes, and whether fusion ran.  The
-cache directory defaults to ``~/.cache/repro/kernels`` and is overridable
-via ``$REPRO_KERNEL_CACHE`` (tests point it at a tmpdir).
+emitted kernel: backend, dims, block shapes, whether fusion ran, and the
+``CODEGEN_VERSION`` salt.  The cache directory defaults to
+``~/.cache/repro/kernels`` and is overridable via ``$REPRO_KERNEL_CACHE``
+(tests point it at a tmpdir).
 """
 
 from __future__ import annotations
@@ -28,6 +29,14 @@ from typing import Any, Dict, Optional, Tuple
 from repro.core.graph import Graph
 
 _SCHEMA_VERSION = 1
+
+# Version salt for everything downstream of the graph fingerprint: fusion
+# rules, the selection cost model, and the three backend code generators.
+# Bump it whenever any of those change semantics so stale on-disk plans
+# from an older build are never loaded (they would re-lower a snapshot
+# selected — or shaped — by the old compiler).  v2: causal/GQA attention
+# (mask-aware cost model, lead-dim packing).
+CODEGEN_VERSION = 2
 
 
 def _norm(d: Optional[Dict[str, Any]]) -> Tuple:
@@ -53,7 +62,10 @@ class CacheKey:
                    opts)
 
     def digest(self) -> str:
-        raw = json.dumps([_SCHEMA_VERSION, self.fingerprint, self.backend,
+        # CODEGEN_VERSION is read at call time so tests (and hot-reloads)
+        # that bump the module global invalidate every existing entry
+        raw = json.dumps([_SCHEMA_VERSION, CODEGEN_VERSION,
+                          self.fingerprint, self.backend,
                           self.dims, self.blocks, self.fused, self.opts])
         return hashlib.sha256(raw.encode()).hexdigest()[:32]
 

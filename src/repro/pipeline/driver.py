@@ -21,9 +21,11 @@ program input/output names, so all three backends are drop-in
 interchangeable — that is what the differential test harness exploits.
 
 Results are memoized in a two-level :class:`KernelCache` keyed by
-``(Graph.fingerprint(), dims, backend, blocks, fused)``: in-process hits
-return the existing jitted callable; on-disk hits skip fusion + selection
-and only re-lower.
+``(Graph.fingerprint(), dims, backend, blocks, fused)`` plus the
+``cache.CODEGEN_VERSION`` salt (on-disk plans written by an older
+fusion/selection/codegen build are never loaded): in-process hits return
+the existing jitted callable; on-disk hits skip fusion + selection and
+only re-lower.
 """
 
 from __future__ import annotations

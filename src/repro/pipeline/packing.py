@@ -3,8 +3,12 @@ backends speak:
 
 * **merged**  — one dense array per program value; the i-th blocked dim of
   its VType splits the i-th array axis (``block[M,D]`` of shape
-  ``(M*bm, D*bd)``).  This is the public calling convention of every
-  compiled kernel and the layout the Pallas backend consumes directly.
+  ``(M*bm, D*bd)``).  When a value has more list dims than its item has
+  axes (e.g. the GQA head-group dim: ``block[H,M,D]``), the *leading*
+  extra dims are plain stack axes of extent ``dims[d]`` — the merged
+  array is ``(H, M*bm, D*bd)``.  This is the public calling convention
+  of every compiled kernel and the layout the Pallas backend consumes
+  directly.
 * **stacked** — one leading axis per list level (``(M, D, bm, bd)``), the
   layout ``codegen_jax`` lowers to (vmap/scan axes).
 * **nested**  — nested python lists of item arrays, the interpreter's
@@ -22,8 +26,6 @@ import numpy as np
 
 from repro.core.graph import Graph, VType
 
-_ITEM_NDIM = {"block": 2, "vector": 1, "scalar": 0}
-
 
 def block_shape(merged_shape: Sequence[int], vt: VType,
                 dims: Dict[str, int]) -> Dict[str, int]:
@@ -40,23 +42,35 @@ def block_shape(merged_shape: Sequence[int], vt: VType,
 
 
 def to_stacked(arr, vt: VType, dims: Dict[str, int]):
-    """merged -> stacked: split the first len(dims) axes into
-    (count, block) pairs and hoist the counts to the front."""
+    """merged -> stacked: split the blocked axes into (count, block)
+    pairs and hoist the counts to the front.  Leading stack axes (list
+    depth beyond the item rank) are already per-dim counts and pass
+    through unchanged."""
     n = len(vt.dims)
     if n == 0:
         return arr
-    shape: List[int] = []
-    for i, d in enumerate(vt.dims):
-        c = dims[d]
-        if arr.shape[i] % c:
+    lead = vt.lead_dims
+    k = n - lead
+    for i, d in enumerate(vt.dims[:lead]):
+        if arr.shape[i] != dims[d]:
             raise ValueError(
-                f"cannot split axis {i} (size {arr.shape[i]}) of {vt!r} "
+                f"stack axis {i} of {vt!r} has size {arr.shape[i]}, "
+                f"expected {dims[d]} (dim {d})")
+    shape: List[int] = list(arr.shape[:lead])
+    for i, d in enumerate(vt.dims[lead:]):
+        c = dims[d]
+        ax = lead + i
+        if arr.shape[ax] % c:
+            raise ValueError(
+                f"cannot split axis {ax} (size {arr.shape[ax]}) of {vt!r} "
                 f"into {c} blocks")
-        shape += [c, arr.shape[i] // c]
-    shape += list(arr.shape[n:])
+        shape += [c, arr.shape[ax] // c]
+    shape += list(arr.shape[lead + k:])
     r = arr.reshape(shape)
-    perm = ([2 * i for i in range(n)] + [2 * i + 1 for i in range(n)]
-            + list(range(2 * n, r.ndim)))
+    perm = (list(range(lead))
+            + [lead + 2 * i for i in range(k)]
+            + [lead + 2 * i + 1 for i in range(k)]
+            + list(range(lead + 2 * k, r.ndim)))
     return r.transpose(perm)
 
 
@@ -65,14 +79,19 @@ def from_stacked(arr, vt: VType, dims: Dict[str, int]):
     n = len(vt.dims)
     if n == 0:
         return arr
-    # axes: [c0..c{n-1}, b0..b{n-1}, rest] -> interleave then merge pairs
-    perm: List[int] = []
-    for i in range(n):
-        perm += [i, n + i]
-    perm += list(range(2 * n, arr.ndim))
+    lead = vt.lead_dims
+    k = n - lead
+    # axes: [lead..., c0..c{k-1}, b0..b{k-1}, rest] -> interleave counts
+    # with their blocks, then merge each pair
+    perm: List[int] = list(range(lead))
+    for i in range(k):
+        perm += [lead + i, lead + k + i]
+    perm += list(range(lead + 2 * k, arr.ndim))
     r = arr.transpose(perm)
-    shape = [r.shape[2 * i] * r.shape[2 * i + 1] for i in range(n)]
-    shape += list(r.shape[2 * n:])
+    shape = list(r.shape[:lead])
+    shape += [r.shape[lead + 2 * i] * r.shape[lead + 2 * i + 1]
+              for i in range(k)]
+    shape += list(r.shape[lead + 2 * k:])
     return r.reshape(shape)
 
 

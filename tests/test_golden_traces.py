@@ -11,7 +11,9 @@ worse snapshots downstream of ``pipeline.compile``.
 from collections import Counter
 
 from repro.core import array_program as AP
+from repro.core import ops as O
 from repro.core.fusion import FusionTrace, fuse
+from repro.core.graph import FuncNode, Graph, MapNode, internal_buffered_edges
 
 # Example 1: the paper's 17-step Flash Attention derivation.
 GOLDEN_ATTENTION_TRACE = [
@@ -23,6 +25,33 @@ GOLDEN_ATTENTION_TRACE = [
     "rule1_fuse_consecutive_maps",
     "rule4_swap_scale_dot",
     "rule3_fuse_map_reduction",
+    "rule1_fuse_consecutive_maps",
+    "rule1_fuse_consecutive_maps",
+    "rule1_fuse_consecutive_maps",
+    "rule1_fuse_consecutive_maps",
+    "rule3_fuse_map_reduction",
+    "rule9_fuse_consecutive_elementwise",
+    "rule3_fuse_map_reduction",
+    "rule6_extend_map",
+    "rule1_fuse_consecutive_maps",
+]
+
+# Causal attention: the decoder-side flash rediscovery.  Two extra Rule-1
+# steps absorb the mask's Map_M{Map_N{causal_mask}} into the score chain;
+# the rest replays the Example-1 derivation (the mask rides inside the
+# maps, so the serial N-spine still forms and Rule 9 still folds the
+# scale into the exp).
+GOLDEN_CAUSAL_ATTENTION_TRACE = [
+    "rule1_fuse_consecutive_maps",
+    "rule1_fuse_consecutive_maps",
+    "rule1_fuse_consecutive_maps",
+    "rule1_fuse_consecutive_maps",
+    "rule1_fuse_consecutive_maps",
+    "rule1_fuse_consecutive_maps",
+    "rule1_fuse_consecutive_maps",
+    "rule4_swap_scale_dot",
+    "rule3_fuse_map_reduction",
+    "rule1_fuse_consecutive_maps",
     "rule1_fuse_consecutive_maps",
     "rule1_fuse_consecutive_maps",
     "rule1_fuse_consecutive_maps",
@@ -84,6 +113,59 @@ def test_swiglu_megakernel_golden_trace():
     assert got == GOLDEN_SWIGLU_TRACE, got
 
 
+def _serial_map(g: Graph):
+    """Descend the single-map spine to the serial (accumulated) map."""
+    cur = g
+    while True:
+        (mid,) = [n for n in cur.op_nodes()
+                  if isinstance(cur.nodes[n], MapNode)]
+        node = cur.nodes[mid]
+        if node.serial:
+            return node
+        cur = node.inner
+
+
+def _has_causal_mask(g: Graph) -> bool:
+    for node in g.nodes.values():
+        if isinstance(node, FuncNode) and isinstance(node.op,
+                                                     O.CausalMask):
+            return True
+        if isinstance(node, MapNode) and _has_causal_mask(node.inner):
+            return True
+    return False
+
+
+def test_causal_attention_golden_trace():
+    got = _trace(AP.causal_attention_program(0.125))
+    assert got == GOLDEN_CAUSAL_ATTENTION_TRACE, got
+
+
+def test_causal_mask_fuses_into_serial_map():
+    """The mask must ride inside the serial N-map of the flash spine —
+    not split the spine into separate kernels (the fused program is
+    buffer-free and the masked score feeds the in-loop exp directly)."""
+    final = fuse(AP.causal_attention_program(0.125))[-1]
+    assert internal_buffered_edges(final) == []
+    smap = _serial_map(final)
+    assert smap.dim == "N"
+    assert _has_causal_mask(smap.inner)
+
+    # the same holds under the GQA head-group wrap
+    gqa = fuse(AP.gqa_attention_program(0.125, causal=True))[-1]
+    assert internal_buffered_edges(gqa) == []
+    smap = _serial_map(gqa)
+    assert smap.dim == "N" and _has_causal_mask(smap.inner)
+
+
+def test_gqa_trace_matches_inner_program():
+    """The H wrap adds no fusion steps of its own: the GQA trace is the
+    inner attention trace replayed one level deeper."""
+    assert _trace(AP.gqa_attention_program(0.125)) == \
+        _trace(AP.attention_program(0.125))
+    assert _trace(AP.gqa_attention_program(0.125, causal=True)) == \
+        _trace(AP.causal_attention_program(0.125))
+
+
 def test_golden_rule_counts():
     """Counts, separately from order, for a friendlier failure signal."""
     att = Counter(_trace(AP.attention_program(0.125)))
@@ -107,5 +189,7 @@ def test_golden_trace_independent_of_constants():
     scale constants (selection owns shapes; fusion owns structure)."""
     assert _trace(AP.attention_program(0.125)) == \
         _trace(AP.attention_program(0.99))
+    assert _trace(AP.causal_attention_program(0.125)) == \
+        _trace(AP.causal_attention_program(0.99))
     assert _trace(AP.rmsnorm_ffn_swiglu_program(512.0)) == \
         _trace(AP.rmsnorm_ffn_swiglu_program(64.0, eps=1e-6))

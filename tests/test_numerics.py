@@ -59,3 +59,34 @@ def test_stabilized_on_every_snapshot(rng):
     for s in fuse(case.graph):
         stab = merge(run_stabilized(s, case.inputs, case.dims)["O"])
         np.testing.assert_allclose(stab, case.ref, rtol=1e-9, atol=1e-9)
+
+
+def test_stabilized_causal_survives_huge_logits(rng):
+    """Online *causal* softmax: fully-masked tiles produce pairs with an
+    exponent of ~scale*NEG_MASK that must vanish under pair_add, and the
+    masked entries of partial tiles must not poison the running max."""
+    from repro.core import array_program as AP
+    from repro.core import blocks as B
+
+    M = N = 4
+    D = L = 2
+    b = 8
+    seq = M * b
+    Q = rng.normal(size=(seq, D * b)) * 30
+    K = rng.normal(size=(seq, D * b)) * 30
+    V = rng.normal(size=(seq, L * b))
+    pos = np.arange(seq, dtype=np.float64)
+    scale = 1.0 / np.sqrt(D * b)
+    s = np.where(pos[:, None] >= pos[None, :], Q @ K.T, -np.inf) * scale
+    p = np.exp(s - s.max(1, keepdims=True))
+    ref = (p / p.sum(1, keepdims=True)) @ V
+    assert (s.max() > 709), "logits must overflow naive float64 exp"
+
+    inputs = {"Q": B.split(Q, M, D), "KT": B.split(K, N, D),
+              "VT": B.split(V.T, L, N), "QP": B.split_rows(pos, M),
+              "KP": B.split_rows(pos, N)}
+    dims = {"M": M, "D": D, "N": N, "L": L}
+    for snap in fuse(AP.causal_attention_program(scale)):
+        stab = merge(run_stabilized(snap, inputs, dims)["O"])
+        assert np.isfinite(stab).all()
+        np.testing.assert_allclose(stab, ref, rtol=1e-9, atol=1e-9)

@@ -213,12 +213,40 @@ def test_model_layers_execute_through_pipeline(monkeypatch, tmp_path):
     a_got = L.attention_apply(p, x, cfg_pipe, causal=False)
     np.testing.assert_allclose(np.asarray(a_got), np.asarray(a_ref),
                                rtol=2e-5, atol=2e-5)
-    # causal attention falls back to the XLA flash path, still correct
+    # causal attention also compiles through the pipeline (the causal
+    # block program — no XLA fallback; see test_attention_programs.py
+    # for the full {causal} x {MHA, GQA} x backend matrix)
     c_ref = L.attention_apply(p, x, cfg_ref, causal=True)
     c_got = L.attention_apply(p, x, cfg_pipe, causal=True)
     np.testing.assert_allclose(np.asarray(c_got), np.asarray(c_ref),
                                rtol=2e-5, atol=2e-5)
     pipeline.reset_default_cache()
+
+
+def test_codegen_version_salts_disk_cache(tmp_path, layernorm_case,
+                                          monkeypatch):
+    """Bumping CODEGEN_VERSION must miss the on-disk plan cache: plans
+    written by an older compiler are never re-lowered by a newer one."""
+    from repro.pipeline import cache as cache_mod
+
+    case = layernorm_case
+    c1 = pipeline.KernelCache(tmp_path)
+    k1 = pipeline.compile(case.graph, case.dims, backend="jax", cache=c1)
+    assert k1.cache_hit is None
+
+    # same version, fresh process (fresh KernelCache object): disk hit
+    c2 = pipeline.KernelCache(tmp_path)
+    assert pipeline.compile(case.graph, case.dims, backend="jax",
+                            cache=c2).cache_hit == "disk"
+
+    # bumped version, fresh process: the stale plan is invisible
+    monkeypatch.setattr(cache_mod, "CODEGEN_VERSION",
+                        cache_mod.CODEGEN_VERSION + 1)
+    c3 = pipeline.KernelCache(tmp_path)
+    k3 = pipeline.compile(case.graph, case.dims, backend="jax", cache=c3)
+    assert k3.cache_hit is None
+    got = np.asarray(k3(_merged_inputs(case))[case.out_name])
+    np.testing.assert_allclose(got, case.ref, rtol=2e-4, atol=2e-4)
 
 
 def test_packing_roundtrip(rng):

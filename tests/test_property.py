@@ -125,6 +125,41 @@ def test_elementwise_composition_associative(exprs, seed):
                                rtol=1e-10, atol=1e-10)
 
 
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(2, 12), d=st.integers(1, 3), fused=st.booleans())
+def test_causal_traffic_strictly_below_noncausal(n, d, fused):
+    """The mask-aware cost model: for more than one sequence block, the
+    causal program moves strictly fewer bytes than the non-causal one
+    (fully-masked tiles are never touched), fused or not."""
+    from repro.core import selection as SEL
+
+    dims = {"M": n, "D": d, "N": n, "L": d}
+    gc = AP.causal_attention_program(0.125)
+    gn = AP.attention_program(0.125)
+    if fused:
+        gc, gn = fuse(gc)[-1], fuse(gn)[-1]
+    bc = C.traffic(gc, dims).bytes_moved(SEL.DEFAULT_ITEM_BYTES)
+    bn = C.traffic(gn, dims).bytes_moved(SEL.DEFAULT_ITEM_BYTES)
+    assert bc < bn
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 10), d=st.integers(1, 3))
+def test_causal_traffic_monotone_in_seq_len(n, d):
+    """Predicted causal traffic grows strictly with the number of
+    sequence blocks (the discount never makes a longer sequence look
+    cheaper)."""
+    from repro.core import selection as SEL
+
+    fused = fuse(AP.causal_attention_program(0.125))[-1]
+
+    def cost(k):
+        return C.traffic(fused, {"M": k, "D": d, "N": k, "L": d}
+                         ).bytes_moved(SEL.DEFAULT_ITEM_BYTES)
+
+    assert cost(n) < cost(n + 1)
+
+
 @settings(max_examples=10, deadline=None)
 @given(seed=st.integers(0, 1000),
        splits=st.tuples(st.integers(1, 4), st.integers(1, 4)))
