@@ -1,0 +1,144 @@
+"""CI benchmark-regression gate.
+
+    python benchmarks/check_regression.py BENCH_ci.json benchmarks/baseline.json
+
+Compares a fresh ``run.py --only pipeline --preset ci --json BENCH_ci.json``
+run against the committed baseline and exits non-zero if
+
+  * any pipeline row's **predicted traffic reduction** regresses more
+    than 10% below the baseline (the fusion objective got worse for the
+    same program/config),
+  * any **Pallas region falls back** off the Pallas backend in ANY row,
+    baseline-listed or new (``pallas_fallbacks != 0`` — the selected
+    snapshot must lower), or
+  * a baseline row is missing from the fresh run.
+
+Wall-clock columns are never gated — CI runners are too noisy; the
+gated quantities are deterministic functions of the cost model and the
+lowering, which is exactly what makes them gateable.
+
+Re-pin the baseline with
+
+    python benchmarks/check_regression.py --pin BENCH_ci.json benchmarks/baseline.json
+
+which writes ONLY the gated keys (predicted traffic reduction, region
+and fallback counts) so baseline diffs show real changes, not
+machine-local wall-clock noise.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+TOLERANCE = 0.10  # fail when reduction drops >10% below baseline
+GATED_KEYS = ("pred_traffic_reduction", "pallas_regions",
+              "pallas_fallbacks")
+
+
+def _parse_derived(derived: str) -> dict:
+    out = {}
+    for part in derived.split(";"):
+        if "=" in part:
+            k, v = part.split("=", 1)
+            out[k] = v
+    return out
+
+
+def _rows(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    rows = data["rows"] if isinstance(data, dict) else data
+    return {r["name"]: _parse_derived(r["derived"]) for r in rows
+            if r["name"].startswith("pipeline_")}
+
+
+def _reduction(derived: dict) -> float:
+    return float(derived["pred_traffic_reduction"].rstrip("x"))
+
+
+def _pin(current_path: str, baseline_path: str) -> int:
+    """Write a gated-keys-only baseline from a fresh run."""
+    with open(current_path) as f:
+        data = json.load(f)
+    rows = data["rows"] if isinstance(data, dict) else data
+    pinned = []
+    for r in rows:
+        if not r["name"].startswith("pipeline_"):
+            continue
+        derived = _parse_derived(r["derived"])
+        kept = ";".join(f"{k}={derived[k]}" for k in GATED_KEYS
+                        if k in derived)
+        pinned.append({"name": r["name"], "derived": kept})
+    with open(baseline_path, "w") as f:
+        json.dump({"preset": data.get("preset", "ci"), "rows": pinned}, f,
+                  indent=2)
+        f.write("\n")
+    print(f"pinned {len(pinned)} row(s) -> {baseline_path}")
+    return 0
+
+
+def main(argv) -> int:
+    if len(argv) == 4 and argv[1] == "--pin":
+        return _pin(argv[2], argv[3])
+    if len(argv) != 3:
+        print(__doc__)
+        return 2
+    current, baseline = _rows(argv[1]), _rows(argv[2])
+    failures, improved = [], []
+    print(f"{'benchmark':32s} {'base':>8s} {'now':>8s}  verdict")
+    for name, base in sorted(baseline.items()):
+        cur = current.get(name)
+        if cur is None:
+            failures.append(f"{name}: missing from current run")
+            continue
+        base_red, cur_red = _reduction(base), _reduction(cur)
+        floor = base_red * (1.0 - TOLERANCE)
+        verdict = "ok"
+        if cur_red < floor:
+            verdict = "REGRESSED"
+            failures.append(
+                f"{name}: predicted traffic reduction {cur_red:.2f}x < "
+                f"{floor:.2f}x (baseline {base_red:.2f}x - {TOLERANCE:.0%})")
+        elif cur_red > base_red * (1.0 + TOLERANCE):
+            verdict = "improved (re-pin baseline?)"
+            improved.append(name)
+        # region count is pinned too: MORE kernels for the same program
+        # is a lowering regression (launches + cross-region traffic);
+        # fewer is an improvement worth re-pinning
+        base_rg, cur_rg = base.get("pallas_regions"), cur.get(
+            "pallas_regions")
+        if base_rg is not None and cur_rg is not None:
+            if int(cur_rg) > int(base_rg):
+                verdict = "MORE REGIONS"
+                failures.append(
+                    f"{name}: selected snapshot now lowers to {cur_rg} "
+                    f"Pallas kernels (baseline {base_rg})")
+            elif int(cur_rg) < int(base_rg) and verdict == "ok":
+                verdict = "improved (re-pin baseline?)"
+                improved.append(name)
+        print(f"{name:32s} {base_red:7.2f}x {cur_red:7.2f}x  {verdict}")
+    # the fallback gate covers EVERY current row, including programs not
+    # yet pinned into the baseline — a new benchmark may not sneak a
+    # non-lowering snapshot past the gate
+    for name, cur in sorted(current.items()):
+        fb = cur.get("pallas_fallbacks")
+        if fb is not None and fb != "0":
+            failures.append(f"{name}: {fb} Pallas region(s) fell back to "
+                            "the jax backend")
+    extra = sorted(set(current) - set(baseline))
+    if extra:
+        print("note: rows not in baseline (traffic unchecked, fallbacks "
+              f"still gated): {', '.join(extra)}")
+    if failures:
+        print("\nBENCH GATE FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("\nbench gate passed"
+          + (f" ({len(improved)} row(s) improved)" if improved else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -36,6 +36,23 @@ EXAMPLES = {
                            {"M": 8, "D": 8, "K": 16, "N": 8}),
 }
 
+# the tiny fixed configuration CI's bench job runs (block size 8,
+# 2 repeats): small enough for an ubuntu runner, same programs, and the
+# derived values the regression gate compares (predicted traffic
+# reduction, pallas region/fallback counts) are deterministic
+CI_EXAMPLES = {
+    "attention": (lambda: AP.attention_program(0.125),
+                  {"M": 2, "D": 2, "N": 4, "L": 2}),
+    "causal_attention": (lambda: AP.causal_attention_program(0.125),
+                         {"M": 4, "D": 2, "N": 4, "L": 2}),
+    "layernorm_matmul": (lambda: AP.layernorm_matmul_program(64.0),
+                         {"M": 2, "K": 4, "N": 2}),
+    "rmsnorm_ffn_swiglu": (lambda: AP.rmsnorm_ffn_swiglu_program(64.0),
+                           {"M": 2, "D": 2, "K": 4, "N": 2}),
+}
+
+PRESETS = {"full": (EXAMPLES, 5, 16), "ci": (CI_EXAMPLES, 2, 8)}
+
 
 def bench_example(name: str) -> List[Dict]:
     build, dims = EXAMPLES[name]
@@ -79,15 +96,17 @@ def _random_inputs(g, dims: Dict[str, int], bs: int, rng) -> Dict:
     return out
 
 
-def bench_pipeline_example(name: str, repeats: int = 5,
-                           bs: int = 16) -> List[Dict]:
+def bench_pipeline_example(name: str, repeats: int = 5, bs: int = 16,
+                           examples: Dict = None) -> List[Dict]:
     """Fused vs unfused wall time through ``pipeline.compile`` (jax
-    backend), with the cost model's predicted traffic side by side."""
+    backend), with the cost model's predicted traffic side by side, plus
+    the Pallas lowering report of the selected snapshot (regions emitted
+    and fallbacks taken — the CI gate pins fallbacks to zero)."""
     import jax
 
     from repro import pipeline
 
-    build, dims = EXAMPLES[name]
+    build, dims = (examples or EXAMPLES)[name]
     g = build()
     blocks = {d: bs for d in dims}
     inputs = _random_inputs(g, dims, bs, np.random.default_rng(0))
@@ -110,6 +129,11 @@ def bench_pipeline_example(name: str, repeats: int = 5,
     # the second compile must be an in-process cache hit
     rehit = pipeline.compile(g, dims, backend="jax", blocks=blocks,
                              cache=cache).cache_hit
+    # Pallas lowering of the SAME selected snapshot (emission only):
+    # region DAG size and fallback count, gated to zero in CI
+    kp = pipeline.compile(g, dims, backend="pallas", blocks=blocks,
+                          interpret=True, cache=cache)
+    rep = kp.lowering_report
     return [{
         "name": f"pipeline_{name}",
         "us_per_call": fused_us,
@@ -119,15 +143,19 @@ def bench_pipeline_example(name: str, repeats: int = 5,
             f"pred_cost_fused={kf.cost:.3g};"
             f"pred_cost_unfused={kf.initial_cost:.3g};"
             f"pred_traffic_reduction={kf.predicted_traffic_reduction:.2f}x;"
-            f"snapshot={kf.snapshot_index};recompile_hit={rehit}"
+            f"snapshot={kf.snapshot_index};recompile_hit={rehit};"
+            f"pallas_regions={rep.n_regions};"
+            f"pallas_fallbacks={rep.fallbacks}"
         ),
     }]
 
 
-def run_pipeline() -> List[Dict]:
+def run_pipeline(preset: str = "full") -> List[Dict]:
+    examples, repeats, bs = PRESETS[preset]
     rows = []
-    for name in EXAMPLES:
-        rows.extend(bench_pipeline_example(name))
+    for name in examples:
+        rows.extend(bench_pipeline_example(name, repeats=repeats, bs=bs,
+                                           examples=examples))
     return rows
 
 

@@ -11,12 +11,18 @@ Prints ``name,us_per_call,derived`` CSV:
                   artifact (if dryrun_results.json exists).
 
 ``--only SECTION`` (fusion | pipeline | kernel | roofline) restricts the
-run; default runs everything.
+run; default runs everything.  ``--preset ci`` shrinks the pipeline
+section to the tiny fixed configuration the CI benchmark gate compares
+against ``benchmarks/baseline.json``; ``--json PATH`` additionally
+writes the rows as JSON (CI uploads it as the ``BENCH_ci.json``
+artifact and feeds it to ``benchmarks/check_regression.py``).
 """
 
 from __future__ import annotations
 
 import argparse
+import functools
+import json
 
 
 def main() -> None:
@@ -25,11 +31,16 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=["fusion", "pipeline", "kernel",
                                        "roofline"], default=None)
+    ap.add_argument("--preset", choices=sorted(fusion_bench.PRESETS),
+                    default="full")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as JSON (the CI artifact)")
     args = ap.parse_args()
 
     sections = {
         "fusion": fusion_bench.run,
-        "pipeline": fusion_bench.run_pipeline,
+        "pipeline": functools.partial(fusion_bench.run_pipeline,
+                                      preset=args.preset),
         "kernel": kernel_bench.run,
         "roofline": roofline.run,
     }
@@ -41,6 +52,9 @@ def main() -> None:
     print("name,us_per_call,derived")
     for r in rows:
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"preset": args.preset, "rows": rows}, f, indent=2)
 
 
 if __name__ == "__main__":

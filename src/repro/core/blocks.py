@@ -1,13 +1,19 @@
 """Utilities for splitting arrays into blocks and merging them back.
 
 The paper stores each matrix as a list of lists-of-blocks (row-major).
+Also home to the *merged dense* layout math (``merged_shape`` /
+``item_shape``) shared by ``pipeline/packing.py`` and the Pallas
+backend — pure functions of a VType, so they live in core and both
+layers import downward.
 """
 
 from __future__ import annotations
 
-from typing import Any, List, Sequence, Tuple
+from typing import Any, Dict, List, Sequence, Tuple
 
 import numpy as np
+
+from repro.core.graph import VType
 
 
 def split(arr, n_row_blocks: int, n_col_blocks: int) -> List[List[Any]]:
@@ -32,3 +38,34 @@ def merge(blocks) -> np.ndarray:
 
 def merge_vectors(vectors) -> np.ndarray:
     return np.concatenate(vectors, axis=0)
+
+
+def merged_shape(vt: VType, item_shape: Sequence[int],
+                 dims: Dict[str, int]) -> Tuple[int, ...]:
+    """Shape of the merged dense array holding a value of type ``vt``
+    whose items have shape ``item_shape``.  Leading list dims beyond the
+    item rank are stack axes of extent ``dims[d]``; the next dims scale
+    the item's axes; trailing item axes pass through.  This is the
+    layout contract every region kernel reads and writes, so it is also
+    how the Pallas backend sizes the intermediate arrays it threads
+    between regions."""
+    lead = max(len(vt.dims) - len(item_shape), 0)
+    k = len(vt.dims) - lead
+    shape = [dims[d] for d in vt.dims[:lead]]
+    shape += [item_shape[j] * dims[vt.dims[lead + j]] for j in range(k)]
+    shape += [item_shape[j] for j in range(k, len(item_shape))]
+    return tuple(shape)
+
+
+def item_shape(merged: Sequence[int], vt: VType,
+               dims: Dict[str, int]) -> Tuple[int, ...]:
+    """Inverse of :func:`merged_shape`: per-axis item extents of a value
+    stored as a merged array of the given shape.  This does not assume
+    the i-th list dim splits the i-th axis with a uniform per-dim block
+    size — intermediates (e.g. matmul partials ``block[M,N,K]``) are
+    covered too."""
+    lead = vt.lead_dims
+    out = [merged[lead + i] // dims[d]
+           for i, d in enumerate(vt.dims[lead:])]
+    out += list(merged[len(vt.dims):])
+    return tuple(out)

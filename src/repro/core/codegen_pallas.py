@@ -1,62 +1,129 @@
-"""Emit a Pallas TPU kernel directly from a fused block program.
+"""Emit Pallas TPU kernels from *any* fusion snapshot.
 
-Scope: the program class the fusion algorithm produces for the paper's
-Example 1 — a spine of parallel maps (-> pallas grid dimensions) around
-one serial accumulator map (-> the trailing sequential grid dimension
-with f32 VMEM scratch carries), functional operators in the epilogue, and
-deeper serial maps evaluated in-kernel over whole-resident dims.
+The lowering is region-based (``core/regions.py``): the snapshot is
+partitioned into a DAG of spine regions — each a nest of parallel maps
+(-> pallas grid dimensions) around at most one accumulating node (a
+serial map or a reduce -> the trailing sequential grid dimension with
+f32 VMEM scratch carries) — and ``emit_program`` emits one
+``pallas_call`` per region, multi-output, threading every value that
+crosses a region boundary as a merged global array between kernels.
+The fully fused snapshots still lower to exactly one mega-kernel (the
+paper's Example 1 epilogue == ``kernels/flash_attention.py`` modulo the
+online-softmax rescale); partially fused snapshots and multi-output
+programs lower to the multi-kernel schedule their traffic cost already
+described, instead of raising ``"expected a single-map-spine"``.
 
-`emit(fuse(attention_program(s))[-1], ...)` produces — automatically —
-the same kernel structure as the hand-written
-``kernels/flash_attention.py`` (modulo the online-softmax rescale, which
-is the appendix's separate numerics pass, exactly as in the paper).
-
-Layout convention: an IR input typed ``block[A,B]`` is one merged array
-of shape (A*bA, B*bB); dims on the grid are tiled by BlockSpecs, other
-dims are whole-resident in VMEM and in-kernel loops slice them.  A value
-with more list dims than item axes (``block[H,M,D]`` — the GQA
-head-group dim) carries the *leading* extra dims as plain stack axes of
-extent ``dims[d]`` (block size 1): on the grid they are selected by the
-BlockSpec and squeezed in-kernel; off the grid they unroll to an
-in-kernel list.
+Layout convention (program boundary and inter-region values alike): a
+value typed ``block[A,B]`` is one merged array; leading list dims beyond
+the item rank are plain stack axes of extent ``dims[d]``, the remaining
+list dims split the item's axes in order — with the *actual* per-axis
+item extents, which for intermediates (e.g. matmul partials
+``block[M,N,K]``) need not equal ``blocks[d]``.  Item shapes are
+propagated region-to-region via ``pipeline/packing.py`` helpers.  Dims
+on a region's grid are tiled by BlockSpecs; other dims are
+whole-resident in VMEM and in-kernel loops slice them.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import regions as R
+from repro.core.blocks import item_shape as infer_item_shape
+from repro.core.blocks import merged_shape
 from repro.core.graph import (FuncNode, Graph, InputNode, MapNode,
-                              OutputNode, ReduceNode, VType)
+                              OutputNode, Ref, ReduceNode, VType)
+from repro.core.regions import ProgramPlan, RegionError, RegionSpec
+
+
+# ---------------------------------------------------------------------------
+# Reports: what lowered, how, and what (if anything) fell back
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class RegionReport:
+    label: str
+    grid_dims: Tuple[str, ...]
+    red_dim: Optional[str]
+    n_outputs: int
+    fallback: Optional[str] = None  # reason, when not lowered to Pallas
 
 
 @dataclass
-class KernelPlan:
-    grid_dims: List[str]
-    red_dim: str
-    spine: List[int]  # map node ids, top level -> the serial map
+class LoweringReport:
+    """Provenance of one ``emit_program`` call: every region emitted and
+    every fallback taken (which must be zero for in-repo programs)."""
+
+    regions: List[RegionReport] = field(default_factory=list)
+
+    @property
+    def n_regions(self) -> int:
+        return len(self.regions)
+
+    @property
+    def fallbacks(self) -> int:
+        return sum(1 for r in self.regions if r.fallback is not None)
+
+    def summary(self) -> str:
+        parts = []
+        for r in self.regions:
+            grid = ",".join(r.grid_dims)
+            tail = f"+{r.red_dim}*" if r.red_dim else ""
+            note = f" FALLBACK({r.fallback})" if r.fallback else ""
+            parts.append(f"{r.label}[{grid}{tail}]{note}")
+        return f"{self.n_regions} regions: " + "; ".join(parts)
 
 
-def plan(g: Graph) -> KernelPlan:
-    grid: List[str] = []
-    spine: List[int] = []
-    cur = g
-    while True:
-        maps = [n for n in cur.op_nodes()
-                if isinstance(cur.nodes[n], MapNode)]
-        if len(maps) != 1:
-            raise ValueError("expected a single-map spine (fused program)")
-        node: MapNode = cur.nodes[maps[0]]
-        spine.append(maps[0])
-        if node.serial:
-            return KernelPlan(grid, node.dim, spine)
-        grid.append(node.dim)
-        cur = node.inner
+def plan(g: Graph) -> ProgramPlan:
+    """Partition ``g`` into its Pallas region DAG (no codegen)."""
+    return R.plan_program(g)
+
+
+def resolve_interpret(interpret) -> bool:
+    """``"auto"``/``None`` -> interpret everywhere except a real TPU
+    backend.  Single source of the policy for emit and pipeline.compile."""
+    if interpret in (None, "auto"):
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
+# ---------------------------------------------------------------------------
+# Merged-layout helpers (actual item extents, not blocks[d])
+# ---------------------------------------------------------------------------
+
+def _axes(vt: VType, item_shape: Sequence[int]):
+    """Per merged axis: ``(dim_or_None, per_block_extent)``.  Leading list
+    dims beyond the item rank are stack axes (extent 1 per block); the
+    next ``len(vt.dims) - lead`` item axes are split by the remaining
+    dims; trailing item axes are untouched."""
+    lead = max(len(vt.dims) - len(item_shape), 0)
+    k = len(vt.dims) - lead
+    axes = [(d, 1) for d in vt.dims[:lead]]
+    axes += [(vt.dims[lead + j], item_shape[j]) for j in range(k)]
+    axes += [(None, item_shape[j]) for j in range(k, len(item_shape))]
+    return axes
+
+
+def _block_shape(vt, item_shape, dims, grid_axes) -> Tuple[int, ...]:
+    return tuple(b if d in grid_axes else (b * dims[d] if d else b)
+                 for d, b in _axes(vt, item_shape))
+
+
+def _block_spec(vt, item_shape, dims, grid_axes) -> pl.BlockSpec:
+    axes = _axes(vt, item_shape)
+    shape = _block_shape(vt, item_shape, dims, grid_axes)
+
+    def index_map(*gids, axes=tuple(axes)):
+        pos = dict(zip(grid_axes, gids))
+        return tuple(pos[d] if d in grid_axes else 0 for d, _ in axes)
+
+    return pl.BlockSpec(shape, index_map)
 
 
 def _split_whole(arr, vt_dims, dims, grid_axes, axis=0):
@@ -78,10 +145,12 @@ def _split_whole(arr, vt_dims, dims, grid_axes, axis=0):
     return parts
 
 
-def _split_input(arr, vt: VType, dims, grid_axes):
-    """Lead-aware version of :func:`_split_whole` for a kernel input: the
-    leading stack axes (``VType.lead_dims``) are squeezed when
-    grid-selected, or unrolled into in-kernel lists otherwise."""
+def _split_value(arr, vt: VType, item_shape, dims, grid_axes):
+    """Kernel block -> the IR's nested-list value layout: leading stack
+    axes are squeezed when grid-selected or unrolled into in-kernel
+    lists; the remaining list dims slice item axes."""
+    lead = max(len(vt.dims) - len(item_shape), 0)
+
     def rec(a, vt_dims, lead):
         if lead:
             d = vt_dims[0]
@@ -91,8 +160,42 @@ def _split_input(arr, vt: VType, dims, grid_axes):
                     for i in range(dims[d])]
         return _split_whole(a, list(vt_dims), dims, grid_axes)
 
-    return rec(arr, vt.dims, vt.lead_dims)
+    return rec(arr, vt.dims, lead)
 
+
+def _merge_value(val, vt: VType, item_rank: int, dims, grid_axes):
+    """Inverse of :func:`_split_value` for an output value: stack
+    off-grid lead lists, concatenate off-grid split lists along their
+    item axis.  Grid-selected dims contribute nothing (the BlockSpec
+    positions the block); the caller reshapes to the out-ref block."""
+    lead = max(len(vt.dims) - item_rank, 0)
+
+    def rec(v, ds, lead, axis):
+        if not ds:
+            return v
+        d = ds[0]
+        if lead:
+            if d in grid_axes:
+                return rec(v, ds[1:], lead - 1, axis)
+            return jnp.stack([rec(x, ds[1:], lead - 1, axis) for x in v],
+                             axis=0)
+        if d in grid_axes:
+            return rec(v, ds[1:], 0, axis + 1)
+        return jnp.concatenate([rec(x, ds[1:], 0, axis + 1) for x in v],
+                               axis=axis)
+
+    return rec(val, vt.dims, lead, 0)
+
+
+def _first_item(v):
+    while isinstance(v, list):
+        v = v[0]
+    return v
+
+
+# ---------------------------------------------------------------------------
+# In-kernel evaluation
+# ---------------------------------------------------------------------------
 
 def _eval_inner(g: Graph, env: Dict, dims: Dict[str, int]) -> List[Any]:
     """In-kernel evaluation; list values are python lists of VMEM slices,
@@ -137,171 +240,393 @@ def _eval_inner(g: Graph, env: Dict, dims: Dict[str, int]) -> List[Any]:
     return [out[oid] for oid in g.output_ids]
 
 
-def resolve_interpret(interpret) -> bool:
-    """``"auto"``/``None`` -> interpret everywhere except a real TPU
-    backend.  Single source of the policy for emit and pipeline.compile."""
-    if interpret in (None, "auto"):
-        return jax.default_backend() != "tpu"
-    return bool(interpret)
+def _eval_funcs(g: Graph, env: Dict, skip: set, dims) -> Dict:
+    """Evaluate every FuncNode of one spine level except ``skip``
+    (the spine map / the accumulator and its epilogue)."""
+    env = dict(env)
+    for nid in g.topo():
+        node = g.nodes[nid]
+        if isinstance(node, FuncNode) and nid not in skip:
+            ins = [env[(e.src, e.sp)] for e in g.in_edges(nid)]
+            env[(nid, 0)] = node.op.apply(jnp, *ins)
+    return env
 
 
-def emit(g: Graph, dims: Dict[str, int], blocks: Dict[str, int],
-         interpret="auto") -> Callable[..., jax.Array]:
-    """``interpret`` may be a bool, ``None``, or ``"auto"`` (see
-    :func:`resolve_interpret`)."""
-    interpret = resolve_interpret(interpret)
-    kp = plan(g)
-    grid_axes = kp.grid_dims + [kp.red_dim]
-    in_names = [g.nodes[i].name for i in g.input_ids]
-    in_types = [g.nodes[i].vtype for i in g.input_ids]
-    n_red = dims[kp.red_dim]
+def _downstream(g: Graph, nid: int) -> set:
+    seen = {nid}
+    frontier = [nid]
+    while frontier:
+        n = frontier.pop()
+        for e in g.out_edges(n):
+            if e.dst not in seen:
+                seen.add(e.dst)
+                frontier.append(e.dst)
+    return seen
 
-    out_types = g.infer_types()
-    oe = g.in_edge(g.output_ids[0], 0)
-    out_vt = out_types[(oe.src, oe.sp)]
-    out_lead = out_vt.lead_dims
-    for vt in in_types + [out_vt]:
-        for d in vt.dims[:vt.lead_dims]:
-            if blocks.get(d, 1) != 1:
-                raise ValueError(
-                    f"stack dim {d} of {vt!r} needs block size 1, got "
-                    f"{blocks[d]}")
 
-    # locate the serial map and its containing level
-    level = g
-    for nid in kp.spine[:-1]:
-        level = level.nodes[nid].inner
-    smid = kp.spine[-1]
-    smap: MapNode = level.nodes[smid]
-    n_acc = sum(r is not None for r in smap.reduced)
+# ---------------------------------------------------------------------------
+# Region lowering
+# ---------------------------------------------------------------------------
 
-    def spec_for(vt: VType) -> pl.BlockSpec:
-        shape = tuple(blocks[d] if d in grid_axes else blocks[d] * dims[d]
-                      for d in vt.dims)
-        tiled = tuple(d if d in grid_axes else None for d in vt.dims)
+@dataclass(frozen=True)
+class _OutSlot:
+    kind: str            # "step" (written every serial step) | "final"
+    level: int           # spine level index (len(levels) == base level)
+    ref: Ref             # value ref at that level (final slots)
+    step_port: int = -1  # acc list-port index (step slots)
+    vt: VType = VType()
 
-        def index_map(*gids, tiled=tiled):
-            pos = dict(zip(grid_axes, gids))
-            return tuple(pos[d] if d is not None else 0 for d in tiled)
 
-        return pl.BlockSpec(shape, index_map)
+def _region_levels(spec: RegionSpec):
+    """(parallel levels [(graph, map id)], base graph, acc id or None)."""
+    rg = spec.graph
+    root = [n for n in rg.op_nodes()][0]
+    levels: List[Tuple[Graph, int]] = []
+    g_lvl, node = rg, rg.nodes[root]
+    nid = root
+    while isinstance(node, MapNode) and not node.serial:
+        gi = node.inner
+        pars = [n for n in sorted(gi.op_nodes())
+                if isinstance(gi.nodes[n], MapNode)
+                and not gi.nodes[n].serial]
+        accs = [n for n in sorted(gi.op_nodes())
+                if (isinstance(gi.nodes[n], MapNode)
+                    and gi.nodes[n].serial)
+                or isinstance(gi.nodes[n], ReduceNode)]
+        levels.append((g_lvl, nid))
+        if len(pars) == 1 and not accs:
+            g_lvl, nid, node = gi, pars[0], gi.nodes[pars[0]]
+            continue
+        if pars:
+            raise RegionError(f"not a spine region: {spec.label}")
+        return levels, gi, (accs[0] if accs else None)
+    if isinstance(node, (MapNode, ReduceNode)):  # serial root / reduce root
+        return levels, g_lvl, nid
+    return levels, g_lvl, None  # func root
 
-    def bind_spine(values_by_id: Dict[int, Any]):
-        """Walk parallel levels (grid-selected: ports pass through) and
-        return (serial-level graph, env keyed by input node id)."""
-        cur_g, cur_env = g, values_by_id
-        for nid in kp.spine[:-1]:
-            node: MapNode = cur_g.nodes[nid]
+
+def _classify_outputs(spec: RegionSpec, levels, base_g, acc_id,
+                      red_dim, types) -> List[_OutSlot]:
+    rg = spec.graph
+    slots: List[_OutSlot] = []
+    for oid in rg.output_ids:
+        e = rg.in_edge(oid, 0)
+        ref: Ref = (e.src, e.sp)
+        lvl = 0
+        while lvl < len(levels) and ref[0] == levels[lvl][1]:
+            mnode: MapNode = levels[lvl][0].nodes[levels[lvl][1]]
+            inner = mnode.inner
+            ie = inner.in_edge(inner.output_ids[ref[1]], 0)
+            ref = (ie.src, ie.sp)
+            lvl += 1
+        vt = types[(e.src, e.sp)]
+        if (acc_id is not None and ref[0] == acc_id
+                and isinstance(base_g.nodes[acc_id], MapNode)
+                and base_g.nodes[acc_id].reduced[ref[1]] is None):
+            slots.append(_OutSlot("step", lvl, ref, ref[1], vt))
+        else:
+            slots.append(_OutSlot("final", lvl, ref, -1, vt))
+    return slots
+
+
+def emit_region(spec: RegionSpec, dims: Dict[str, int],
+                in_item_shapes: List[Tuple[int, ...]], interpret: bool):
+    """Lower one region to a single multi-output ``pallas_call``.
+
+    Returns ``(fn, out_item_shapes, report)`` where ``fn`` maps merged
+    input arrays to a tuple of merged output arrays."""
+    rg = spec.graph
+    levels, base_g, acc_id = _region_levels(spec)
+    red_dim = spec.red_dim
+    grid_dims = list(spec.grid_dims)
+    grid_axes = grid_dims + ([red_dim] if red_dim else [])
+    for d in grid_axes:
+        if d not in dims:
+            raise RegionError(f"grid dim {d} missing from dims")
+
+    in_types = [rg.nodes[i].vtype for i in rg.input_ids]
+    types = rg.infer_types()
+    acc_node = base_g.nodes[acc_id] if acc_id is not None else None
+    if isinstance(acc_node, ReduceNode) and acc_node.op != "+":
+        raise RegionError(f"non-additive reduce {acc_node.op!r}")
+    epilogue_skip = (_downstream(base_g, acc_id)
+                     if acc_id is not None else set())
+    slots = _classify_outputs(spec, levels, base_g, acc_id, red_dim, types)
+
+    def bind_values(values: Dict[int, Any]):
+        """Walk the parallel levels, evaluating level funcs; returns the
+        per-level envs plus the base-level env (pre-accumulator)."""
+        envs: List[Dict] = []
+        env = {(iid, 0): values[iid] for iid in rg.input_ids}
+        for lg, mid in levels:
+            env = _eval_funcs(lg, env, {mid}, dims)
+            envs.append(env)
+            mnode: MapNode = lg.nodes[mid]
             nxt = {}
-            for p, e in enumerate(cur_g.in_edges(nid)):
-                assert isinstance(cur_g.nodes[e.src], InputNode), \
-                    "spine ports must come from inputs (fused program)"
-                nxt[node.inner.input_ids[p]] = cur_env[e.src]
-            cur_g, cur_env = node.inner, nxt
-        return cur_g, cur_env
+            for p, e in enumerate(lg.in_edges(mid)):
+                nxt[(mnode.inner.input_ids[p], 0)] = env[(e.src, e.sp)]
+            env = nxt
+        return envs, env
 
-    def serial_step(values_by_id: Dict[int, Any]) -> List[Any]:
-        lvl_g, lvl_env = bind_spine(values_by_id)
+    def serial_step(values: Dict[int, Any]):
+        """One accumulator step: (partials, {list port: step value})."""
+        _, env = bind_values(values)
+        env = _eval_funcs(base_g, env, epilogue_skip, dims)
+        if isinstance(acc_node, ReduceNode):
+            e = base_g.in_edge(acc_id, 0)
+            return [env[(e.src, e.sp)]], {}
         senv: Dict = {}
-        for p, e in enumerate(lvl_g.in_edges(smid)):
-            senv[(smap.inner.input_ids[p], 0)] = lvl_env[e.src]
-        res = _eval_inner(smap.inner, senv, dims)
-        return [res[pp] for pp, r in enumerate(smap.reduced)
-                if r is not None]
+        for p, e in enumerate(base_g.in_edges(acc_id)):
+            senv[(acc_node.inner.input_ids[p], 0)] = env[(e.src, e.sp)]
+        res = _eval_inner(acc_node.inner, senv, dims)
+        partials = [res[p] for p, r in enumerate(acc_node.reduced)
+                    if r is not None]
+        steps = {p: res[p] for p, r in enumerate(acc_node.reduced)
+                 if r is None}
+        return partials, steps
 
-    def epilogue(values_by_id: Dict[int, Any], acc_vals: List[Any]):
-        lvl_g, lvl_env = bind_spine(values_by_id)
-        env: Dict = {}
-        for iid in lvl_g.input_ids:
-            env[(iid, 0)] = lvl_env[iid]
-        ai = 0
-        for pp, r in enumerate(smap.reduced):
-            if r is not None:
-                env[(smid, pp)] = acc_vals[ai]
-                ai += 1
-        outs = {}
-        for nid in lvl_g.topo():
-            node = lvl_g.nodes[nid]
-            if isinstance(node, InputNode) or nid == smid:
-                continue
-            if isinstance(node, OutputNode):
-                e = lvl_g.in_edge(nid, 0)
-                outs[nid] = env[(e.src, e.sp)]
-            elif isinstance(node, FuncNode):
-                ins = [env[(e.src, e.sp)] for e in lvl_g.in_edges(nid)]
-                env[(nid, 0)] = node.op.apply(jnp, *ins)
+    def final_envs(values: Dict[int, Any], acc_vals: List[Any]):
+        envs, env = bind_values(values)
+        if acc_id is not None:
+            ai = 0
+            if isinstance(acc_node, ReduceNode):
+                env[(acc_id, 0)] = acc_vals[0]
             else:
-                raise TypeError(f"epilogue: {node.label()}")
-        return outs[lvl_g.output_ids[0]]
+                for p, r in enumerate(acc_node.reduced):
+                    if r is not None:
+                        env[(acc_id, p)] = acc_vals[ai]
+                        ai += 1
+        env = _eval_funcs(base_g, env, {acc_id} if acc_id is not None
+                          else set(), dims)
+        envs.append(env)
+        return envs
+
+    # -- abstract shape analysis (one invocation) ---------------------------
+    abstract_ins = [
+        jax.ShapeDtypeStruct(_block_shape(vt, ish, dims, grid_axes),
+                             jnp.float32)
+        for vt, ish in zip(in_types, in_item_shapes)]
+
+    def abs_values(arrs):
+        return {iid: _split_value(a, vt, ish, dims, grid_axes)
+                for iid, a, vt, ish in zip(rg.input_ids, arrs, in_types,
+                                           in_item_shapes)}
+
+    n_acc = 0
+    scratch: List[Any] = []
+    if acc_id is not None:
+        acc_shapes = jax.eval_shape(
+            lambda *a: tuple(serial_step(abs_values(a))[0]), *abstract_ins)
+        scratch = [pltpu.VMEM(a.shape, jnp.float32) for a in acc_shapes]
+        n_acc = len(acc_shapes)
+
+    def out_items(*arrs):
+        values = abs_values(arrs)
+        steps: Dict[int, Any] = {}
+        if acc_id is not None:
+            partials, steps = serial_step(values)
+            envs = final_envs(values, list(partials))
+        else:
+            envs = final_envs(values, [])
+        picked = []
+        for s in slots:
+            v = steps[s.step_port] if s.kind == "step" else envs[s.level][s.ref]
+            picked.append(_first_item(v))
+        return tuple(picked)
+
+    out_item_abs = jax.eval_shape(out_items, *abstract_ins)
+    out_item_shapes = [tuple(a.shape) for a in out_item_abs]
+    out_full = [merged_shape(s.vt, ish, dims)
+                for s, ish in zip(slots, out_item_shapes)]
+    out_specs = [_block_spec(s.vt, ish, dims, grid_axes)
+                 for s, ish in zip(slots, out_item_shapes)]
+    in_specs = [_block_spec(vt, ish, dims, grid_axes)
+                for vt, ish in zip(in_types, in_item_shapes)]
+
+    n_in, n_out = len(rg.input_ids), len(slots)
+    n_red = dims[red_dim] if red_dim else 0
+
+    def write(o_ref, slot, ish, v):
+        merged = _merge_value(v, slot.vt, len(ish), dims, grid_axes)
+        o_ref[...] = merged.reshape(o_ref.shape).astype(o_ref.dtype)
 
     def kernel(*refs):
-        in_refs = refs[:len(in_names)]
-        o_ref = refs[len(in_names)]
-        acc_refs = refs[len(in_names) + 1:]
-        ri = pl.program_id(len(grid_axes) - 1)
+        in_refs = refs[:n_in]
+        out_refs = refs[n_in:n_in + n_out]
+        acc_refs = refs[n_in + n_out:]
+        values = {iid: _split_value(r[...], vt, ish, dims, grid_axes)
+                  for iid, r, vt, ish in zip(rg.input_ids, in_refs,
+                                             in_types, in_item_shapes)}
+        if acc_id is None:
+            envs = final_envs(values, [])
+            for o_ref, slot, ish in zip(out_refs, slots, out_item_shapes):
+                write(o_ref, slot, ish, envs[slot.level][slot.ref])
+            return
+        ri = pl.program_id(len(grid_dims))
 
         @pl.when(ri == 0)
         def _init():
             for a in acc_refs:
                 a[...] = jnp.zeros_like(a)
 
-        values = {iid: _split_input(r[...], vt, dims, grid_axes)
-                  for iid, r, vt in zip(g.input_ids, in_refs, in_types)}
-        partials = serial_step(values)
+        partials, steps = serial_step(values)
         for a, p_val in zip(acc_refs, partials):
             a[...] += p_val.astype(jnp.float32)
+        for o_ref, slot, ish in zip(out_refs, slots, out_item_shapes):
+            if slot.kind == "step":
+                write(o_ref, slot, ish, steps[slot.step_port])
 
         @pl.when(ri == n_red - 1)
         def _done():
-            res = epilogue(values, [a[...] for a in acc_refs])
-            o_ref[...] = res.reshape(o_ref.shape).astype(o_ref.dtype)
+            envs = final_envs(values, [a[...] for a in acc_refs])
+            for o_ref, slot, ish in zip(out_refs, slots, out_item_shapes):
+                if slot.kind == "final":
+                    write(o_ref, slot, ish, envs[slot.level][slot.ref])
 
-    # accumulator shapes via abstract evaluation of one serial step
-    abstract_ins = [
-        jax.ShapeDtypeStruct(
-            tuple(blocks[d] if d in grid_axes else blocks[d] * dims[d]
-                  for d in vt.dims), jnp.float32)
-        for vt in in_types]
-
-    def one_step(*arrs):
-        values = {iid: _split_input(a, vt, dims, grid_axes)
-                  for iid, a, vt in zip(g.input_ids, arrs, in_types)}
-        return serial_step(values)
-
-    acc_shapes = jax.eval_shape(one_step, *abstract_ins)
-    scratch = [pltpu.VMEM(a.shape, jnp.float32) for a in acc_shapes]
-    assert len(acc_shapes) == n_acc
-
-    out_block = jax.eval_shape(
-        lambda arrs, accs: epilogue(
-            {iid: _split_input(a, vt, dims, grid_axes)
-             for iid, a, vt in zip(g.input_ids, arrs, in_types)},
-            list(accs)), tuple(abstract_ins), tuple(acc_shapes))
-
-    # leading stack dims of the output (head-group H) prepend size-1 axes
-    # to the epilogue's item block
-    out_block_shape = (1,) * out_lead + tuple(out_block.shape)
     grid = tuple(dims[d] for d in grid_axes)
-    out_spec = pl.BlockSpec(
-        out_block_shape,
-        lambda *gids: tuple(gids[:len(kp.grid_dims)])
-        + (0,) * (len(out_block_shape) - len(kp.grid_dims)))
-    out_full = tuple(
-        s * (dims[d] if i < len(kp.grid_dims) else 1)
-        for i, (s, d) in enumerate(
-            zip(out_block_shape,
-                kp.grid_dims + [kp.red_dim] * 8)))
 
-    def wrapper(*merged_inputs):
-        return pl.pallas_call(
+    def region_fn(*merged_inputs):
+        dtype = (jnp.result_type(*merged_inputs) if merged_inputs
+                 else jnp.float32)
+        outs = pl.pallas_call(
             kernel,
             grid=grid,
-            in_specs=[spec_for(vt) for vt in in_types],
-            out_specs=out_spec,
-            out_shape=jax.ShapeDtypeStruct(out_full,
-                                           merged_inputs[0].dtype),
+            in_specs=in_specs,
+            out_specs=out_specs,
+            out_shape=[jax.ShapeDtypeStruct(s, dtype) for s in out_full],
             scratch_shapes=scratch,
             interpret=interpret,
         )(*merged_inputs)
+        return tuple(outs)
 
-    return wrapper
+    report = RegionReport(spec.label, tuple(grid_dims), red_dim, n_out)
+    return region_fn, out_item_shapes, report
+
+
+def _fallback_region(spec: RegionSpec, dims: Dict[str, int],
+                     in_item_shapes, reason: str):
+    """Region the Pallas emitter cannot express: lower it with the jax
+    backend (vmap/scan) behind the same merged-array contract."""
+    from repro.core.codegen_jax import compile_program
+    from repro.pipeline import packing as P
+    rg = spec.graph
+    in_info = [(rg.nodes[i].name, rg.nodes[i].vtype)
+               for i in rg.input_ids]
+    out_types = P.output_types(rg)
+    prog = compile_program(rg)
+
+    def fn(*merged):
+        stacked = [P.to_stacked(a, vt, dims)
+                   for (_, vt), a in zip(in_info, merged)]
+        outs = prog(*stacked)
+        return tuple(P.from_stacked(o, vt, dims)
+                     for vt, o in zip(out_types, outs))
+
+    in_full = [merged_shape(vt, ish, dims)
+               for (_, vt), ish in zip(in_info, in_item_shapes)]
+    abs_out = jax.eval_shape(
+        fn, *[jax.ShapeDtypeStruct(s, jnp.float32) for s in in_full])
+    out_item_shapes = [infer_item_shape(a.shape, vt, dims)
+                       for a, vt in zip(abs_out, out_types)]
+    report = RegionReport(spec.label, tuple(spec.grid_dims), spec.red_dim,
+                          len(out_types), fallback=reason)
+    return fn, out_item_shapes, report
+
+
+# ---------------------------------------------------------------------------
+# Whole-program lowering
+# ---------------------------------------------------------------------------
+
+def emit_program(g: Graph, dims: Dict[str, int], blocks: Dict[str, int],
+                 interpret="auto",
+                 program_plan: Optional[ProgramPlan] = None
+                 ) -> Tuple[Callable[..., Tuple], LoweringReport]:
+    """Lower every region of (the partition of) ``g``.
+
+    Returns ``(fn, report)``: ``fn`` takes one merged array per program
+    input and returns a tuple of merged arrays, one per program output;
+    ``report`` records the regions emitted and any fallbacks taken (a
+    region the Pallas emitter cannot express runs on the jax backend —
+    zero for all in-repo programs, and pinned to zero by
+    ``tests/test_lowering_coverage.py``).  Callers that already
+    partitioned ``g`` (the driver shares one plan between lowering and
+    per-region cost attribution) pass it via ``program_plan``."""
+    interpret = resolve_interpret(interpret)
+    try:
+        pp = program_plan if program_plan is not None else plan(g)
+    except RegionError as err:
+        # un-partitionable program (MiscNode, exotic pass-through): one
+        # whole-program jax region, reported as a fallback
+        whole = RegionSpec(-1, "program", (), None, g.clone(),
+                           [(i, 0) for i in g.input_ids],
+                           [(o, 0) for o in g.output_ids])
+        in_items = [
+            tuple(blocks[d] for d in vt.dims[vt.lead_dims:])
+            for vt in (g.nodes[i].vtype for i in g.input_ids)]
+        fn, _, rep = _fallback_region(whole, dims, in_items, str(err))
+        return fn, LoweringReport([rep])
+    report = LoweringReport()
+
+    item_shapes: Dict[Ref, Tuple[int, ...]] = {}
+    for iid in pp.graph.input_ids:
+        vt = pp.graph.nodes[iid].vtype
+        for d in vt.dims[:vt.lead_dims]:
+            if blocks.get(d, 1) != 1:
+                raise ValueError(
+                    f"stack dim {d} of {vt!r} needs block size 1, got "
+                    f"{blocks[d]}")
+        item_shapes[(iid, 0)] = tuple(blocks[d]
+                                      for d in vt.dims[vt.lead_dims:])
+
+    lowered: List[Tuple[RegionSpec, Callable]] = []
+    for spec in pp.regions:
+        in_items = [item_shapes[r] for r in spec.in_refs]
+        try:
+            fn, out_items, rep = emit_region(spec, dims, in_items,
+                                             interpret)
+        except (RegionError, NotImplementedError) as err:
+            fn, out_items, rep = _fallback_region(spec, dims, in_items,
+                                                  str(err))
+        for ref, ish in zip(spec.out_refs, out_items):
+            item_shapes[ref] = ish
+        lowered.append((spec, fn))
+        report.regions.append(rep)
+
+    out_refs: List[Ref] = []
+    for oid in pp.graph.output_ids:
+        e = pp.graph.in_edge(oid, 0)
+        out_refs.append((e.src, e.sp))
+
+    def run(*merged_inputs):
+        env: Dict[Ref, Any] = {
+            (iid, 0): a
+            for iid, a in zip(pp.graph.input_ids, merged_inputs)}
+        for spec, fn in lowered:
+            outs = fn(*[env[r] for r in spec.in_refs])
+            for ref, o in zip(spec.out_refs, outs):
+                env[ref] = o
+        return tuple(env[r] for r in out_refs)
+
+    return run, report
+
+
+def emit(g: Graph, dims: Dict[str, int], blocks: Dict[str, int],
+         interpret="auto") -> Callable[..., jax.Array]:
+    """Strict single-output convenience wrapper around
+    :func:`emit_program`: every region must lower to Pallas (no jax
+    fallback) and the program must have exactly one output, which is
+    returned as a bare array.  ``interpret`` may be a bool, ``None``, or
+    ``"auto"`` (see :func:`resolve_interpret`)."""
+    fn, report = emit_program(g, dims, blocks, interpret=interpret)
+    if report.fallbacks:
+        bad = [r for r in report.regions if r.fallback]
+        raise ValueError(
+            f"not fully Pallas-lowerable: {[r.fallback for r in bad]}")
+    if len(g.output_ids) != 1:
+        raise ValueError("emit() expects a single-output program; use "
+                         "emit_program for multi-output lowering")
+
+    def single(*merged_inputs):
+        return fn(*merged_inputs)[0]
+
+    return single

@@ -1,0 +1,385 @@
+"""Region partitioning: any fusion snapshot -> a DAG of spine regions.
+
+The Pallas backend lowers one ``pallas_call`` per *region*: a nest of
+parallel maps (grid dimensions) around at most one accumulating node (a
+serial map or a reduce — the trailing sequential grid dimension), with
+functional operators at any level of the nest.  Fusion snapshots are not
+born that way: partially fused programs have sibling maps at a level,
+serial maps next to parallel nests, and reduces consuming materialized
+lists.  ``partition`` rewrites such a snapshot — by *loop fission*, the
+inverse of the paper's Rule 1/2 merges — into an equivalent program whose
+top-level operator nodes are each a valid region, introducing top-level
+edges for every value that crosses a region boundary.  Those edges are
+exactly the global-memory materializations the snapshot's traffic cost
+model already charged for (a list edge inside a map is buffered, paper
+§2), so lowering the partitioned program is an honest execution of the
+*selected* snapshot, not a silently more- or less-fused one.
+
+``plan_program`` then extracts each region as a standalone ``Graph`` with
+its own input/output boundary plus the wiring (which top-level values
+feed it, which it produces) that the executor threads between kernels.
+
+Everything here is pure graph surgery — no jax imports — so the
+selection layer can reuse it for per-region traffic attribution.
+"""
+
+from __future__ import annotations
+
+import copy
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.graph import (FuncNode, Graph, InputNode, MapNode, MiscNode,
+                              Node, OutputNode, Ref, ReduceNode)
+
+
+class RegionError(ValueError):
+    """A nest that cannot be expressed as a single spine region (and that
+    ``partition`` cannot split, e.g. around a ``MiscNode``)."""
+
+
+# ---------------------------------------------------------------------------
+# Region validity: the exact shape codegen_pallas can emit as one kernel
+# ---------------------------------------------------------------------------
+
+def _misc_free(g: Graph) -> bool:
+    for node in g.nodes.values():
+        if isinstance(node, MiscNode):
+            return False
+        if isinstance(node, MapNode) and not _misc_free(node.inner):
+            return False
+    return True
+
+
+def _level_split(g: Graph):
+    """Classify one level's op nodes: (parallel maps, accumulating nodes,
+    funcs, miscs)."""
+    pars, accs, funcs, miscs = [], [], [], []
+    for nid in sorted(g.op_nodes()):
+        node = g.nodes[nid]
+        if isinstance(node, MapNode):
+            (accs if node.serial else pars).append(nid)
+        elif isinstance(node, ReduceNode):
+            accs.append(nid)
+        elif isinstance(node, FuncNode):
+            funcs.append(nid)
+        else:
+            miscs.append(nid)
+    return pars, accs, funcs, miscs
+
+
+def spine(node: Node) -> Optional[Tuple[List[str], Optional[str]]]:
+    """``(grid_dims, red_dim)`` if the nest rooted at ``node`` is a valid
+    region, else ``None``.
+
+    A valid region is a chain of parallel maps (each level holding the
+    next spine map plus only functional operators), ending in a level with
+    at most one accumulating node — a serial map (its inner evaluates
+    whole-resident in-kernel) or a reduce fed straight from a level input
+    (its list dim becomes the trailing serial grid dim).
+    """
+    if isinstance(node, FuncNode):
+        return [], None
+    if isinstance(node, ReduceNode):
+        return [], None  # red_dim resolved from the input type at emit time
+    if not isinstance(node, MapNode):
+        return None
+    grid: List[str] = []
+    while True:
+        if node.serial:
+            return (grid, node.dim) if _misc_free(node.inner) else None
+        grid.append(node.dim)
+        gi = node.inner
+        pars, accs, funcs, miscs = _level_split(gi)
+        if miscs:
+            return None
+        if len(pars) == 1 and not accs:
+            node = gi.nodes[pars[0]]
+            continue
+        if pars:
+            return None
+        if not accs:
+            return grid, None  # pure parallel nest
+        if len(accs) > 1:
+            return None
+        acc = gi.nodes[accs[0]]
+        if isinstance(acc, MapNode):
+            return (grid, acc.dim) if _misc_free(acc.inner) else None
+        # ReduceNode: its list input must be sliceable by the grid, i.e.
+        # come straight from a level input
+        e = gi.in_edge(accs[0], 0)
+        src = gi.nodes[e.src]
+        if not isinstance(src, InputNode) or not src.vtype.dims:
+            return None
+        return grid, src.vtype.dims[0]
+
+
+def region_ok(node: Node) -> bool:
+    return spine(node) is not None
+
+
+# ---------------------------------------------------------------------------
+# Fission: split an invalid parallel map into one map per region group
+# ---------------------------------------------------------------------------
+
+def _group_ops(gi: Graph) -> Tuple[Dict[int, int], int]:
+    """Partition a level's op nodes into region groups.
+
+    Every non-func node seeds its own group (it is the group's single
+    map/reduce); funcs ride along — with a producing group when one
+    exists (epilogue), else with their first consuming group (prologue) —
+    so fission never manufactures single-elementwise kernels it can
+    avoid.  Group indices respect topological order, keeping the
+    resulting top-level DAG acyclic.
+    """
+    topo_ops = [n for n in gi.topo()
+                if not isinstance(gi.nodes[n], (InputNode, OutputNode))]
+    group_of: Dict[int, int] = {}
+    n_groups = 0
+    for nid in topo_ops:
+        if not isinstance(gi.nodes[nid], FuncNode):
+            group_of[nid] = n_groups
+            n_groups += 1
+    for nid in topo_ops:  # funcs joining a producer's group (epilogue)
+        if nid in group_of:
+            continue
+        srcs = [group_of[e.src] for e in gi.in_edges(nid)
+                if e.src in group_of]
+        if srcs:
+            group_of[nid] = max(srcs)
+    for nid in reversed(topo_ops):  # remaining funcs join a consumer
+        if nid in group_of:
+            continue
+        dsts = [group_of[e.dst] for e in gi.out_edges(nid)
+                if e.dst in group_of]
+        if dsts:
+            group_of[nid] = min(dsts)
+    for nid in topo_ops:  # isolated func chains: own group
+        if nid not in group_of:
+            group_of[nid] = n_groups
+            n_groups += 1
+    return group_of, n_groups
+
+
+def _split_map(gc: Graph, nid: int) -> List[int]:
+    """Replace parallel map ``nid`` of ``gc`` with one map per region
+    group of its inner graph, threading cross-group values as new list
+    edges at the ``gc`` level.  Returns the replacement node ids."""
+    m: MapNode = gc.nodes[nid]
+    assert isinstance(m, MapNode) and not m.serial
+    gi = m.inner
+    types = gi.infer_types()
+    group_of, n_groups = _group_ops(gi)
+    if n_groups < 2:
+        raise RegionError(
+            f"cannot split map[{m.dim}]: single group but not a region")
+
+    out_src: List[Optional[Ref]] = []  # gi ref feeding each m out port
+    for oid in gi.output_ids:
+        e = gi.in_edge(oid, 0)
+        out_src.append((e.src, e.sp))
+
+    # per group: inputs (level-input ports + cross refs) and outputs
+    g_in_ports: List[List[int]] = [[] for _ in range(n_groups)]
+    g_in_cross: List[List[Ref]] = [[] for _ in range(n_groups)]
+    g_out_refs: List[List[Ref]] = [[] for _ in range(n_groups)]
+    in_port_of = {iid: p for p, iid in enumerate(gi.input_ids)}
+
+    topo_ops = [n for n in gi.topo() if n in group_of]
+
+    for gid in range(n_groups):
+        members = [n for n in topo_ops if group_of[n] == gid]
+        for n in members:
+            for e in gi.in_edges(n):
+                if e.src in group_of and group_of[e.src] == gid:
+                    continue
+                if e.src in in_port_of:
+                    p = in_port_of[e.src]
+                    if p not in g_in_ports[gid]:
+                        g_in_ports[gid].append(p)
+                elif (e.src, e.sp) not in g_in_cross[gid]:
+                    g_in_cross[gid].append((e.src, e.sp))
+        # outputs: values consumed by other groups or feeding m's out ports
+        for n in members:
+            node = gi.nodes[n]
+            for p in range(node.n_out()):
+                ref = (n, p)
+                cross = any(group_of.get(e.dst) not in (None, gid)
+                            for e in gi.out_edges(n, p))
+                feeds_out = ref in out_src
+                if (cross or feeds_out) and ref not in g_out_refs[gid]:
+                    g_out_refs[gid].append(ref)
+        g_in_ports[gid].sort()
+        g_in_cross[gid].sort()
+        g_out_refs[gid].sort()
+
+    for p, ref in enumerate(out_src):  # pass-through outputs unsupported
+        if ref[0] in in_port_of and gc.out_edges(nid, p):
+            raise RegionError(
+                f"map[{m.dim}] passes input straight to output")
+
+    # build one new map per group
+    new_ids: List[int] = []
+    port_at: Dict[Ref, Tuple[int, int]] = {}  # gi ref -> (new map id, port)
+    for gid in range(n_groups):
+        members = [n for n in topo_ops if group_of[n] == gid]
+        sub = Graph()
+        sub.causal_dims = dict(gi.causal_dims)
+        ref_map: Dict[Ref, Ref] = {}
+        mapped_flags: List[bool] = []
+        outer_srcs: List[Ref] = []
+        for p in g_in_ports[gid]:
+            src_node: InputNode = gi.nodes[gi.input_ids[p]]
+            iid = sub.add(InputNode(src_node.name, src_node.vtype))
+            ref_map[(gi.input_ids[p], 0)] = (iid, 0)
+            mapped_flags.append(m.mapped[p])
+            oe = gc.in_edge(nid, p)
+            outer_srcs.append((oe.src, oe.sp))
+        for ref in g_in_cross[gid]:
+            vt = types[ref]
+            iid = sub.add(InputNode(f"t{ref[0]}_{ref[1]}", vt))
+            ref_map[ref] = (iid, 0)
+            mapped_flags.append(True)  # cross values vary per iteration
+            outer_srcs.append(port_at[ref])  # producer group built earlier
+        for n in members:  # topo-sorted member ids keep construction stable
+            clone = copy.deepcopy(gi.nodes[n])
+            if isinstance(clone, MapNode):
+                clone.inner.causal_dims = dict(gi.causal_dims)
+            cid = sub.add(clone)
+            for e in gi.in_edges(n):
+                ref_map_src = ref_map[(e.src, e.sp)]
+                sub.connect(ref_map_src, (cid, e.dp))
+            for p in range(clone.n_out()):
+                ref_map[(n, p)] = (cid, p)
+        for k, ref in enumerate(g_out_refs[gid]):
+            oid = sub.add(OutputNode(f"t{ref[0]}_{ref[1]}"))
+            sub.connect(ref_map[ref], (oid, 0))
+
+        new_node = MapNode(m.dim, sub,
+                           mapped_flags, [None] * len(g_out_refs[gid]))
+        new_id = gc.add(new_node)
+        for p, src in enumerate(outer_srcs):
+            gc.connect(src, (new_id, p))
+        for k, ref in enumerate(g_out_refs[gid]):
+            port_at[ref] = (new_id, k)
+        new_ids.append(new_id)
+
+    # rewire consumers of the old map's out ports, then drop it
+    for p, ref in enumerate(out_src):
+        if gc.out_edges(nid, p):
+            gc.rewire_consumers((nid, p), port_at[ref])
+    gc.remove_node(nid)
+    return new_ids
+
+
+def _make_valid(gc: Graph, nid: int) -> None:
+    if nid not in gc.nodes:
+        return
+    node = gc.nodes[nid]
+    if region_ok(node):
+        return
+    if not isinstance(node, MapNode):
+        raise RegionError(f"unsupported region root {node.label()}")
+    if node.serial:
+        raise RegionError(
+            f"serial map[{node.dim}] region contains unsupported nodes")
+    gi = node.inner
+    for inner_id in list(sorted(gi.op_nodes())):
+        _make_valid(gi, inner_id)
+    if region_ok(node):
+        return
+    for new_id in _split_map(gc, nid):
+        _make_valid(gc, new_id)
+
+
+def partition(g: Graph) -> Graph:
+    """Equivalent program whose every top-level op node is a valid region
+    (``region_ok``).  Raises :class:`RegionError` for nests it cannot
+    split (MiscNode / exotic pass-throughs)."""
+    g = g.clone()
+    for nid in list(sorted(g.op_nodes())):
+        _make_valid(g, nid)
+    g.validate()
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Region extraction: one standalone Graph per top-level op node
+# ---------------------------------------------------------------------------
+
+@dataclass
+class RegionSpec:
+    """One kernel's worth of program: a standalone single-op graph plus
+    the top-level wiring the executor threads between kernels."""
+
+    node: int                 # top-level op node id in the partitioned graph
+    label: str
+    grid_dims: Tuple[str, ...]
+    red_dim: Optional[str]
+    graph: Graph              # inputs -> the op node -> outputs
+    in_refs: List[Ref]        # top-level (node, port) feeding each input
+    out_refs: List[Ref]       # top-level (node, port) each output defines
+
+
+@dataclass
+class ProgramPlan:
+    """The partitioned program and its regions in topological order."""
+
+    graph: Graph
+    regions: List[RegionSpec] = field(default_factory=list)
+
+    @property
+    def n_regions(self) -> int:
+        return len(self.regions)
+
+
+def plan_program(g: Graph) -> ProgramPlan:
+    """Partition ``g`` and extract every region.  Regions come back in
+    topological order, so executing them in sequence (threading the
+    ``in_refs``/``out_refs`` values) evaluates the program."""
+    part = partition(g)
+    types = part.infer_types()
+    regions: List[RegionSpec] = []
+    for nid in part.topo():
+        node = part.nodes[nid]
+        if isinstance(node, (InputNode, OutputNode)):
+            continue
+        sp = spine(node)
+        if sp is None:  # partition() guarantees this cannot happen
+            raise RegionError(f"unlowerable region {node.label()}")
+        grid_dims, red_dim = sp
+        if isinstance(node, ReduceNode):
+            e = part.in_edge(nid, 0)
+            red_dim = types[(e.src, e.sp)].dims[0]
+
+        rg = Graph()
+        rg.causal_dims = dict(part.causal_dims)
+        in_refs: List[Ref] = []
+        srcs: List[Ref] = []
+        for p, e in enumerate(part.in_edges(nid)):
+            src = part.nodes[e.src]
+            name = (src.name if isinstance(src, InputNode)
+                    else f"t{e.src}_{e.sp}")
+            rg.add(InputNode(name, types[(e.src, e.sp)]))
+            in_refs.append((e.src, e.sp))
+            srcs.append((e.src, e.sp))
+        clone = copy.deepcopy(node)
+        cid = rg.add(clone)
+        for p in range(len(srcs)):
+            rg.connect((rg.input_ids[p], 0), (cid, p))
+        out_refs: List[Ref] = []
+        for p in range(node.n_out()):
+            if not part.out_edges(nid, p):
+                continue  # dead port: nothing downstream wants it
+            names = [part.nodes[e.dst].name
+                     for e in part.out_edges(nid, p)
+                     if isinstance(part.nodes[e.dst], OutputNode)]
+            oid = rg.add(OutputNode(names[0] if names else f"o{p}"))
+            rg.connect((cid, p), (oid, 0))
+            out_refs.append((nid, p))
+        if not out_refs:
+            continue  # fully dead region
+        rg.validate()
+        regions.append(RegionSpec(nid, node.label(), tuple(grid_dims),
+                                  red_dim, rg, in_refs, out_refs))
+    return ProgramPlan(part, regions)

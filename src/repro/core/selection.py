@@ -47,6 +47,32 @@ def snapshot_cost(g: Graph, dims: Dict[str, int],
     return t.bytes_moved(item_bytes) + KERNEL_LAUNCH_COST * t.launches
 
 
+def region_costs(g: Graph, dims: Dict[str, int],
+                 item_bytes: Optional[Dict[str, int]] = None,
+                 plan=None) -> Optional[Tuple[float, ...]]:
+    """Per-region traffic attribution of one snapshot.
+
+    The Pallas backend executes a snapshot as its region partition
+    (``core/regions.py``): one kernel per region, with every
+    cross-region value materialized in global memory.  Each entry is
+    ``snapshot_cost`` of one region's standalone program (its loads
+    include re-reading cross-region inputs, its launch count is exactly
+    one), so the tuple is the honest per-kernel cost breakdown of what
+    actually runs — the basis for timing-based calibration later.
+    Returns ``None`` for programs the partitioner cannot split
+    (MiscNode-bearing graphs take the whole-program fallback).  Pass a
+    precomputed ``regions.ProgramPlan`` via ``plan`` to avoid
+    re-partitioning (the driver shares one plan with the lowering)."""
+    from repro.core import regions as R
+    if plan is None:
+        try:
+            plan = R.plan_program(g)
+        except R.RegionError:
+            return None
+    return tuple(snapshot_cost(spec.graph, dims, item_bytes)
+                 for spec in plan.regions)
+
+
 def select(g: Graph, dims: Dict[str, int],
            item_bytes: Optional[Dict[str, int]] = None,
            snapshots: Optional[List[Graph]] = None) -> Selected:

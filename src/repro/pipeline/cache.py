@@ -14,6 +14,12 @@ emitted kernel: backend, dims, block shapes, whether fusion ran, and the
 ``CODEGEN_VERSION`` salt.  The cache directory defaults to
 ``~/.cache/repro/kernels`` and is overridable via ``$REPRO_KERNEL_CACHE``
 (tests point it at a tmpdir).
+
+The on-disk level is a size-capped LRU: every hit touches the entry's
+mtime, and after every write the oldest entries are evicted until the
+directory fits ``max_disk_bytes`` (default 1 GiB, overridable via
+``$REPRO_KERNEL_CACHE_MAX_BYTES``; ``0``/negative disables eviction) —
+the cache no longer grows without bound.
 """
 
 from __future__ import annotations
@@ -24,19 +30,24 @@ import os
 import pickle
 from dataclasses import asdict, dataclass, field
 from pathlib import Path
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.graph import Graph
 
-_SCHEMA_VERSION = 1
+_SCHEMA_VERSION = 2  # v2: CachePlan gained per-region traffic attribution
 
 # Version salt for everything downstream of the graph fingerprint: fusion
 # rules, the selection cost model, and the three backend code generators.
 # Bump it whenever any of those change semantics so stale on-disk plans
 # from an older build are never loaded (they would re-lower a snapshot
 # selected — or shaped — by the old compiler).  v2: causal/GQA attention
-# (mask-aware cost model, lead-dim packing).
-CODEGEN_VERSION = 2
+# (mask-aware cost model, lead-dim packing).  v3: region-partitioned
+# multi-kernel Pallas lowering (every snapshot lowers; the walk-back to
+# the final snapshot is gone, so old pallas plans describe kernels this
+# build would never emit).
+CODEGEN_VERSION = 3
+
+DEFAULT_MAX_DISK_BYTES = 1 << 30  # 1 GiB
 
 
 def _norm(d: Optional[Dict[str, Any]]) -> Tuple:
@@ -80,17 +91,24 @@ class CachePlan:
     cost: float
     costs: Tuple[float, ...]
     initial_cost: float
+    # per-region traffic attribution of the selected snapshot (pallas
+    # backend: one entry per emitted kernel), None for other backends
+    region_costs: Optional[Tuple[float, ...]] = None
 
     def to_json(self) -> Dict[str, Any]:
         d = asdict(self)
         d["costs"] = list(self.costs)
+        d["region_costs"] = (list(self.region_costs)
+                             if self.region_costs is not None else None)
         return d
 
     @classmethod
     def from_json(cls, d: Dict[str, Any]) -> "CachePlan":
+        rc = d.get("region_costs")
         return cls(int(d["snapshot_index"]), dict(d["dims"]),
                    float(d["cost"]), tuple(d["costs"]),
-                   float(d["initial_cost"]))
+                   float(d["initial_cost"]),
+                   tuple(rc) if rc is not None else None)
 
 
 @dataclass
@@ -102,14 +120,19 @@ class CacheStats:
 
 class KernelCache:
     def __init__(self, root: Optional[os.PathLike] = None,
-                 disk: bool = True):
+                 disk: bool = True,
+                 max_disk_bytes: Optional[int] = None):
         if root is None:
             root = os.environ.get(
                 "REPRO_KERNEL_CACHE",
                 os.path.join(os.path.expanduser("~"), ".cache", "repro",
                              "kernels"))
+        if max_disk_bytes is None:
+            max_disk_bytes = int(os.environ.get(
+                "REPRO_KERNEL_CACHE_MAX_BYTES", DEFAULT_MAX_DISK_BYTES))
         self.root = Path(root)
         self.disk = disk
+        self.max_disk_bytes = max_disk_bytes
         self._kernels: Dict[CacheKey, Any] = {}
         self.stats = CacheStats()
 
@@ -144,6 +167,11 @@ class KernelCache:
                 graph = pickle.load(f)
         except (OSError, pickle.PickleError, AttributeError):
             graph = None
+        for path in (pj, pg):  # LRU touch: a hit is recent use
+            try:
+                os.utime(path)
+            except OSError:
+                pass
         self.stats.disk_hits += 1
         return plan, graph
 
@@ -169,6 +197,50 @@ class KernelCache:
             except (OSError, pickle.PickleError, TypeError,
                     AttributeError):
                 pass  # plan-only entry: fusion reruns on a disk hit
+        self.evict()
+
+    # -- eviction -----------------------------------------------------------
+    def disk_entries(self) -> List[Tuple[str, float, int]]:
+        """(digest, last-use mtime, total bytes) per on-disk entry."""
+        out = []
+        try:
+            plans = sorted(self.root.glob("*.json"))
+        except OSError:
+            return []
+        for pj in plans:
+            digest = pj.name[:-len(".json")]
+            mtime, size = 0.0, 0
+            for path in (pj, self.root / f"{digest}.graph.pkl"):
+                try:
+                    st = path.stat()
+                except OSError:
+                    continue
+                mtime = max(mtime, st.st_mtime)
+                size += st.st_size
+            out.append((digest, mtime, size))
+        return out
+
+    def evict(self) -> int:
+        """Delete least-recently-used on-disk entries until the cache
+        fits ``max_disk_bytes``.  Returns the number of entries evicted;
+        a non-positive cap disables eviction."""
+        if not self.disk or self.max_disk_bytes <= 0:
+            return 0
+        entries = self.disk_entries()
+        total = sum(size for _, _, size in entries)
+        evicted = 0
+        for digest, _, size in sorted(entries, key=lambda e: e[1]):
+            if total <= self.max_disk_bytes:
+                break
+            for path in (self.root / f"{digest}.json",
+                         self.root / f"{digest}.graph.pkl"):
+                try:
+                    path.unlink()
+                except OSError:
+                    pass
+            total -= size
+            evicted += 1
+        return evicted
 
     def clear_memory(self) -> None:
         self._kernels.clear()

@@ -12,9 +12,16 @@ Backends:
                  slow, numpy-level, the differential oracle.
 * ``"jax"``    — ``codegen_jax.compile_program`` under ``jax.jit``
                  (vmap/scan lowering; runs everywhere, differentiable).
-* ``"pallas"`` — ``codegen_pallas.emit``: one real mega-kernel
-                 (``pallas_call``); interpret-mode off-TPU.  Requires
-                 ``blocks`` (per-dim block sizes).
+* ``"pallas"`` — ``codegen_pallas.emit_program``: the selected snapshot
+                 is partitioned into spine regions and lowered to one
+                 real multi-output ``pallas_call`` per region
+                 (interpret-mode off-TPU); fully fused snapshots are a
+                 single mega-kernel.  Requires ``blocks`` (per-dim block
+                 sizes).  ``CompiledKernel.lowering_report`` records the
+                 regions emitted and fallbacks taken (zero for every
+                 in-repo program — there is no walk-back to a
+                 differently-fused snapshot: what selection picked is
+                 what runs).
 
 Every compiled kernel takes and returns **merged dense arrays** keyed by
 program input/output names, so all three backends are drop-in
@@ -31,8 +38,9 @@ only re-lower.
 from __future__ import annotations
 
 import functools
+import warnings
 from dataclasses import dataclass, replace
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -62,6 +70,11 @@ class CompiledKernel:
     in_names: List[str]
     out_names: List[str]
     _fn: Callable[[Dict[str, Any]], Dict[str, Any]] = None  # type: ignore
+    # pallas backend only: regions emitted / fallbacks taken (see
+    # codegen_pallas.LoweringReport) and the cost model's per-region
+    # traffic attribution of the selected snapshot
+    lowering_report: Optional[Any] = None
+    region_costs: Optional[Tuple[float, ...]] = None
 
     def __call__(self, inputs: Dict[str, Any]) -> Dict[str, Any]:
         missing = [n for n in self.in_names if n not in inputs]
@@ -120,32 +133,45 @@ def _lower_jax(g: Graph, dims: Dict[str, int], jit: bool):
     return call
 
 
-def _lower_pallas(candidates: Sequence[Graph], dims: Dict[str, int],
-                  blocks: Optional[Dict[str, int]], interpret: bool):
-    from repro.core.codegen_pallas import emit
+def _region_plan(g: Graph):
+    """Partition the selected snapshot once; the plan is shared between
+    per-region cost attribution and the Pallas lowering.  ``None`` when
+    the partitioner cannot split (emit_program then takes the
+    whole-program fallback)."""
+    from repro.core import regions as REG
+    try:
+        return REG.plan_program(g)
+    except REG.RegionError:
+        return None
+
+
+def _lower_pallas(g: Graph, dims: Dict[str, int],
+                  blocks: Optional[Dict[str, int]], interpret: bool,
+                  program_plan=None):
+    """Lower the selected snapshot itself — no walking back to a
+    differently-fused candidate.  Returns (call, LoweringReport)."""
+    from repro.core.codegen_pallas import emit_program
     if blocks is None:
         raise ValueError(
             "backend='pallas' needs per-dim block sizes: pass blocks=")
     missing = [d for d in dims if d not in blocks]
     if missing:
         raise ValueError(f"blocks missing sizes for dims {missing}")
-    last_err: Optional[Exception] = None
-    for i, cand in enumerate(candidates):
-        try:
-            f = emit(cand, dims, blocks, interpret=interpret)
-        except ValueError as err:  # not a single-map-spine program
-            last_err = err
-            continue
-        in_info, out_info = _io_info(cand)
+    f, report = emit_program(g, dims, blocks, interpret=interpret,
+                             program_plan=program_plan)
+    if report.fallbacks:
+        warnings.warn(
+            "pallas lowering fallback: "
+            f"{report.fallbacks}/{report.n_regions} regions ran on the "
+            f"jax backend ({report.summary()})", RuntimeWarning,
+            stacklevel=3)
+    in_info, out_info = _io_info(g)
 
-        def call(inputs: Dict[str, Any], _f=f, _in=in_info,
-                 _out=out_info) -> Dict[str, Any]:
-            out = _f(*[inputs[nm] for nm, _ in _in])
-            return {_out[0][0]: out}
+    def call(inputs: Dict[str, Any]) -> Dict[str, Any]:
+        outs = f(*[inputs[nm] for nm, _ in in_info])
+        return {nm: o for (nm, _), o in zip(out_info, outs)}
 
-        return call, i
-    raise ValueError(
-        f"no fusion snapshot lowers to a Pallas kernel: {last_err}")
+    return call, report
 
 
 def compile(graph: Graph, dims: Optional[Dict[str, int]] = None, *,
@@ -194,6 +220,7 @@ def compile(graph: Graph, dims: Optional[Dict[str, int]] = None, *,
 
     plan, selected_graph = cache.get_plan(key)
     snaps: Optional[List[Graph]] = None
+    pplan = None  # shared region partition (pallas cache-miss path)
     if plan is None:
         # -- the full pipeline: fuse -> select/autotune --------------------
         if fused:
@@ -206,10 +233,20 @@ def compile(graph: Graph, dims: Optional[Dict[str, int]] = None, *,
                                snapshots=snaps)
         else:
             sel = SEL.select(graph, dims, item_bytes, snapshots=snaps)
+        selected_graph = snaps[sel.snapshot_index]
+        # per-region traffic attribution of the snapshot that will run
+        # (pallas partitions it into one kernel per region; the same
+        # plan is reused by the lowering below)
+        rcosts = None
+        if backend == "pallas":
+            pplan = _region_plan(selected_graph)
+            rcosts = (SEL.region_costs(selected_graph, sel.dims,
+                                       item_bytes, plan=pplan)
+                      if pplan is not None else None)
         plan = CachePlan(sel.snapshot_index, sel.dims, sel.cost,
                          sel.costs, SEL.snapshot_cost(graph, sel.dims,
-                                                      item_bytes))
-        selected_graph = snaps[sel.snapshot_index]
+                                                      item_bytes),
+                         region_costs=rcosts)
         cache.put_plan(key, plan, selected_graph)
         cache_hit = None
     else:
@@ -221,36 +258,24 @@ def compile(graph: Graph, dims: Optional[Dict[str, int]] = None, *,
 
     use_dims = plan.dims
 
-    # -- backend lowering ---------------------------------------------------
-    snapshot_index = plan.snapshot_index
-    cost = plan.cost
+    # -- backend lowering: the selected snapshot, nothing else --------------
+    report = None
     if backend == "py":
         fn = _lower_py(selected_graph, use_dims)
     elif backend == "jax":
         fn = _lower_jax(selected_graph, use_dims, jit)
-    else:  # pallas: prefer the selected snapshot, fall back to the most
-        # fused candidates (emit needs a single-map spine)
-        if snaps is None:
-            snaps = fuse(graph) if fused else [graph.clone()]
-        cands = [selected_graph] + [s for s in reversed(snaps)
-                                    if s is not selected_graph]
-        fn, ci = _lower_pallas(cands, use_dims, blocks, interpret)
-        if ci > 0:
-            selected_graph = cands[ci]
-            snapshot_index = next(
-                (i for i, s in enumerate(snaps) if s is selected_graph),
-                snapshot_index)
-            # report the cost of the snapshot that actually lowered, not
-            # the one selection wanted but emit rejected
-            cost = SEL.snapshot_cost(selected_graph, use_dims, item_bytes)
+    else:
+        fn, report = _lower_pallas(selected_graph, use_dims, blocks,
+                                   interpret, program_plan=pplan)
 
     in_info, out_info = _io_info(selected_graph)
     kern = CompiledKernel(
         key=key, backend=backend, graph=selected_graph, dims=dict(use_dims),
         blocks=dict(blocks) if blocks else None,
-        snapshot_index=snapshot_index, cost=cost,
+        snapshot_index=plan.snapshot_index, cost=plan.cost,
         initial_cost=plan.initial_cost, cache_hit=cache_hit,
         in_names=[n for n, _ in in_info],
-        out_names=[n for n, _ in out_info], _fn=fn)
+        out_names=[n for n, _ in out_info], _fn=fn,
+        lowering_report=report, region_costs=plan.region_costs)
     cache.put_kernel(key, kern)
     return kern

@@ -20,10 +20,14 @@ jnp-traceable and fuse away under jit.
 
 from __future__ import annotations
 
-from typing import Any, Dict, List, Sequence
+from typing import Any, Dict, List, Sequence, Tuple
 
 import numpy as np
 
+# the merged-layout math lives in core (shared with the Pallas backend,
+# which threads inter-region intermediates in this layout); re-exported
+# here because packing is the pipeline's layout-conversion surface
+from repro.core.blocks import item_shape, merged_shape  # noqa: F401
 from repro.core.graph import Graph, VType
 
 

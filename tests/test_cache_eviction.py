@@ -1,0 +1,117 @@
+"""Size-capped LRU eviction of the on-disk kernel-plan cache.
+
+The ``CODEGEN_VERSION`` salt makes stale plans invisible, but until now
+nothing deleted them (ROADMAP open item).  ``KernelCache`` evicts the
+least-recently-*used* entries (hits touch mtime) after every write until
+the directory fits ``max_disk_bytes``.
+"""
+
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro import pipeline
+from repro.core import array_program as AP
+from repro.pipeline.cache import CacheKey, CachePlan, KernelCache
+
+
+def _plan(i):
+    return CachePlan(0, {"M": i + 1}, 1.0, (1.0,), 2.0)
+
+
+def _key(i):
+    return CacheKey.make(f"fp{i}", "jax", {"M": i + 1}, None, True)
+
+
+def _age(cache, key, seconds):
+    """Backdate an entry's mtime (the LRU clock)."""
+    for path in cache._paths(key):
+        if path.exists():
+            t = time.time() - seconds
+            os.utime(path, (t, t))
+
+
+def _age_all(cache, seconds):
+    t = time.time() - seconds
+    for path in cache.root.glob("*"):
+        os.utime(path, (t, t))
+
+
+def test_old_plans_evicted_fresh_survive(tmp_path):
+    g = AP.layernorm_matmul_program(32.0).clone()
+    cache = KernelCache(tmp_path, max_disk_bytes=1 << 40)
+    sizes = []
+    for i in range(3):
+        cache.put_plan(_key(i), _plan(i), g)
+        sizes.append(sum(s for _, _, s in cache.disk_entries()))
+    per_entry = sizes[0]
+    assert len(cache.disk_entries()) == 3
+
+    # cap to two entries; oldest first in mtime order
+    cache.max_disk_bytes = int(per_entry * 2.5)
+    _age(cache, _key(0), 300)
+    _age(cache, _key(1), 200)
+    _age(cache, _key(2), 100)
+    assert cache.evict() == 1
+    assert cache.get_plan(_key(0)) == (None, None)   # evicted
+    assert cache.get_plan(_key(1))[0] is not None    # survives
+    assert cache.get_plan(_key(2))[0] is not None    # survives
+
+
+def test_eviction_is_lru_not_fifo(tmp_path):
+    g = AP.layernorm_matmul_program(32.0).clone()
+    cache = KernelCache(tmp_path, max_disk_bytes=1 << 40)
+    for i in range(2):
+        cache.put_plan(_key(i), _plan(i), g)
+    per_entry = sum(s for _, _, s in cache.disk_entries()) / 2
+    _age(cache, _key(0), 300)
+    _age(cache, _key(1), 200)
+    # a hit on the older entry refreshes it ...
+    assert cache.get_plan(_key(0))[0] is not None
+    # ... so the cap evicts key 1, the least recently USED
+    cache.max_disk_bytes = int(per_entry * 1.5)
+    assert cache.evict() == 1
+    assert cache.get_plan(_key(0))[0] is not None
+    assert cache.get_plan(_key(1)) == (None, None)
+
+
+def test_writes_trigger_eviction_and_compile_recovers(tmp_path):
+    """Driver-level: a tiny cap keeps the newest plan usable and a
+    re-compile of an evicted program just misses and re-plans."""
+    case_g = AP.layernorm_matmul_program(32.0)
+    att_g = AP.attention_program(0.125)
+    dims_ln = {"M": 2, "K": 4, "N": 2}
+    dims_att = {"M": 2, "D": 2, "N": 2, "L": 2}
+
+    cache = KernelCache(tmp_path, max_disk_bytes=1 << 40)
+    pipeline.compile(case_g, dims_ln, backend="jax", cache=cache)
+    per_entry = sum(s for _, _, s in cache.disk_entries())
+    # cap to ~one entry: writing the attention plan evicts layernorm's
+    cache.max_disk_bytes = int(per_entry * 1.5)
+    _age_all(cache, 300)
+    pipeline.compile(att_g, dims_att, backend="jax", cache=cache)
+    assert len(cache.disk_entries()) == 1
+
+    # fresh cache object over the same dir (== new process): attention
+    # hits disk, layernorm misses and recompiles fine
+    c2 = KernelCache(tmp_path, max_disk_bytes=1 << 40)
+    assert pipeline.compile(att_g, dims_att, backend="jax",
+                            cache=c2).cache_hit == "disk"
+    k = pipeline.compile(case_g, dims_ln, backend="jax", cache=c2)
+    assert k.cache_hit is None
+
+
+def test_zero_cap_disables_eviction(tmp_path):
+    g = AP.layernorm_matmul_program(32.0).clone()
+    cache = KernelCache(tmp_path, max_disk_bytes=0)
+    for i in range(3):
+        cache.put_plan(_key(i), _plan(i), g)
+    assert cache.evict() == 0
+    assert len(cache.disk_entries()) == 3
+
+
+def test_cap_from_environment(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_CACHE_MAX_BYTES", "12345")
+    assert KernelCache(tmp_path).max_disk_bytes == 12345
