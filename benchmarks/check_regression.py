@@ -10,20 +10,28 @@ run against the committed baseline and exits non-zero if
     same program/config),
   * any **Pallas region falls back** off the Pallas backend in ANY row,
     baseline-listed or new (``pallas_fallbacks != 0`` — the selected
-    snapshot must lower), or
+    snapshot must lower),
+  * the **wall-clock fused-vs-unfused speedup** — the geometric mean of
+    the per-row ratios — collapses by more than ``WALL_TOLERANCE``
+    (1.5x) below the baseline's.  Generous on purpose: absolute wall
+    times are never compared across machines, only the same-machine
+    fused/unfused *ratio*; it is aggregated over every program so
+    single-row scheduler noise averages out; and only a >1.5x collapse
+    fails so shared-runner noise cannot, or
   * a baseline row is missing from the fresh run.
 
-Wall-clock columns are never gated — CI runners are too noisy; the
-gated quantities are deterministic functions of the cost model and the
-lowering, which is exactly what makes them gateable.
+Absolute wall-clock columns are never gated — CI runners are too noisy;
+the tightly-gated quantities are deterministic functions of the cost
+model and the lowering, and the only timing key gated (the speedup
+ratio) gets the generous threshold above.
 
 Re-pin the baseline with
 
     python benchmarks/check_regression.py --pin BENCH_ci.json benchmarks/baseline.json
 
 which writes ONLY the gated keys (predicted traffic reduction, region
-and fallback counts) so baseline diffs show real changes, not
-machine-local wall-clock noise.
+and fallback counts, speedup ratio) so baseline diffs show real
+changes, not machine-local wall-clock noise.
 """
 
 from __future__ import annotations
@@ -32,8 +40,9 @@ import json
 import sys
 
 TOLERANCE = 0.10  # fail when reduction drops >10% below baseline
+WALL_TOLERANCE = 1.5  # fail when speedup collapses >1.5x below baseline
 GATED_KEYS = ("pred_traffic_reduction", "pallas_regions",
-              "pallas_fallbacks")
+              "pallas_fallbacks", "speedup")
 
 
 def _parse_derived(derived: str) -> dict:
@@ -118,6 +127,29 @@ def main(argv) -> int:
                 verdict = "improved (re-pin baseline?)"
                 improved.append(name)
         print(f"{name:32s} {base_red:7.2f}x {cur_red:7.2f}x  {verdict}")
+    # wall-clock gate: the same-machine fused/unfused speedup ratio,
+    # aggregated (geometric mean) over every row both runs share so
+    # single-row scheduler noise averages out, with a deliberately
+    # generous threshold for shared runners
+    shared = [(float(baseline[n]["speedup"].rstrip("x")),
+               float(current[n]["speedup"].rstrip("x")))
+              for n in sorted(set(baseline) & set(current))
+              if "speedup" in baseline[n] and "speedup" in current[n]]
+    if shared:
+        import math
+        base_geo = math.exp(sum(math.log(max(b, 1e-9))
+                                for b, _ in shared) / len(shared))
+        cur_geo = math.exp(sum(math.log(max(c, 1e-9))
+                               for _, c in shared) / len(shared))
+        floor = base_geo / WALL_TOLERANCE
+        print(f"{'wall-clock (geomean speedup)':32s} {base_geo:7.2f}x "
+              f"{cur_geo:7.2f}x  "
+              f"{'ok' if cur_geo >= floor else 'WALL REGRESSED'}")
+        if cur_geo < floor:
+            failures.append(
+                f"wall-clock: geomean fused-vs-unfused speedup "
+                f"{cur_geo:.2f}x < {floor:.2f}x (baseline "
+                f"{base_geo:.2f}x / {WALL_TOLERANCE})")
     # the fallback gate covers EVERY current row, including programs not
     # yet pinned into the baseline — a new benchmark may not sneak a
     # non-lowering snapshot past the gate

@@ -35,12 +35,17 @@ def main() -> None:
                     default="full")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows as JSON (the CI artifact)")
+    ap.add_argument("--profile-out", default=None, metavar="PATH",
+                    help="also write the fitted calibration profile "
+                         "(pipeline section) to PATH; it is always "
+                         "saved to the kernel cache dir")
     args = ap.parse_args()
 
     sections = {
         "fusion": fusion_bench.run,
         "pipeline": functools.partial(fusion_bench.run_pipeline,
-                                      preset=args.preset),
+                                      preset=args.preset,
+                                      profile_out=args.profile_out),
         "kernel": kernel_bench.run,
         "roofline": roofline.run,
     }

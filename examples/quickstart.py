@@ -147,3 +147,29 @@ print(f"  max |Z - numpy|  = "
 print(f"  max |XN - numpy| = "
       f"{np.abs(np.asarray(mout['XN']) - xn_ref).max():.2e}")
 assert mkern.lowering_report.fallbacks == 0
+
+# 8. measured autotuning: let selection optimize for TIME, not bytes.
+#    The (calibrated) analytic traffic model prunes the block-count
+#    sweep; only the top-K survivors are compiled and timed (warmup +
+#    median-of-K, fenced); the wall-clock winner is what lowers and
+#    caches.  The analytic choice is always among the timed candidates,
+#    so the measured pick is never slower than it.  The pruning model's
+#    coefficients come from the CalibrationProfile saved for this
+#    (backend, device) in the kernel cache dir, if one exists —
+#    `benchmarks/run.py --only pipeline` fits one for the *pallas*
+#    backend from per-region kernel timings; other backends keep the
+#    default constants until calibrated.
+mkern2 = pipeline.compile(graph, backend="jax",
+                          dim_candidates={"M": [2, 4], "D": [1, 2],
+                                          "N": [4, 8], "L": [1, 2]},
+                          autotune="measured", top_k=3)
+print()
+print(f"measured autotune: dims={mkern2.dims} "
+      f"wall={mkern2.measured_s * 1e6:.0f}us "
+      f"(predicted traffic x{mkern2.predicted_traffic_reduction:.2f})")
+if mkern2.autotune_timings:  # None on a disk-plan hit: nothing re-timed
+    for dkey, secs in mkern2.autotune_timings:
+        print(f"  candidate {dict(dkey)}: {secs * 1e6:.0f}us")
+else:
+    print(f"  (cache_hit={mkern2.cache_hit!r}: the measured winner "
+          "re-loaded without re-timing)")

@@ -1,0 +1,284 @@
+"""Measured calibration of the traffic cost model.
+
+The selection cost model prices a snapshot as
+
+    cost = sum_kind item_coef[kind] * (loads + stores)[kind]
+           + launch_coef * launches
+
+Until this module existed the coefficient vector was a pair of magic
+constants in ``core/selection.py`` (the byte size of a 128x128 f32 block
+and a guessed launch overhead).  :class:`CalibrationProfile` makes it a
+first-class value: the **default** profile reproduces those constants
+exactly (single source of truth — selection re-exports them from here),
+and :func:`fit_profile` learns a measured replacement by least-squares
+over (traffic features, wall seconds) pairs collected from per-region
+kernel timings (``core/timing.py`` pairs each emitted kernel's wall time
+with its ``selection.region_costs`` entry).  This is the same
+measure-then-model loop AutoTVM and Triton's autotuner close: the
+analytic proxy prunes, measurements recalibrate the proxy.
+
+Profiles persist as JSON per ``(backend, device_kind)`` under the kernel
+cache dir (``<cache>/calibration/``) so one calibration run serves later
+processes; :func:`load_profile` falls back to the default — with a
+warning — on a stale or corrupt file.
+
+No jax imports at module level: selection (pure graph math) depends on
+this module, and jax is only needed to ask the device kind.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import warnings
+from dataclasses import dataclass, field, replace
+from pathlib import Path
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import cost as C
+from repro.core.graph import Graph
+
+# the item kinds the block substrate produces; extra kinds found in a
+# program's traffic are appended to the fit on the fly
+ITEM_KINDS = ("block", "vector", "scalar")
+
+PROFILE_SCHEMA = 1
+
+# the historical magic constants (representative 128x128 f32 blocks and a
+# bytes-equivalent launch overhead).  These are the *definition* of the
+# default profile; ``selection.DEFAULT_ITEM_BYTES`` / ``KERNEL_LAUNCH_COST``
+# are re-exports.
+DEFAULT_ITEM_BYTES: Dict[str, float] = {"block": 128 * 128 * 4,
+                                        "vector": 128 * 4, "scalar": 4}
+KERNEL_LAUNCH_COST = 1e5
+
+
+@dataclass(frozen=True)
+class CalibrationProfile:
+    """Coefficients of the selection cost model.
+
+    ``item_coef[kind]`` is the cost of moving one item of that kind and
+    ``launch_coef`` the cost of one kernel launch.  Units are whatever
+    the profile was fitted in — bytes-equivalent for the default,
+    seconds for a measured fit; selection only ranks, so units cancel.
+    """
+
+    item_coef: Mapping[str, float]
+    launch_coef: float
+    backend: str = "any"
+    device_kind: str = "any"
+    source: str = "default"       # "default" | "measured" | "item_bytes"
+    n_samples: int = 0
+    residual: float = 0.0         # rms relative residual of the fit
+
+    def cost(self, t: C.Traffic) -> float:
+        return (t.bytes_moved(self.item_coef)
+                + self.launch_coef * t.launches)
+
+    def predict(self, features: Mapping[str, float]) -> float:
+        """Cost of a :func:`traffic_features` row — identical to
+        :meth:`cost` on the traffic it was derived from."""
+        return (sum(self.item_coef.get(k, 0.0) * v
+                    for k, v in features.items() if k != "launches")
+                + self.launch_coef * features.get("launches", 0.0))
+
+    def digest(self) -> str:
+        """Short stable hash — cache keys embed it so a kernel selected
+        under one profile is never served for another."""
+        import hashlib
+        raw = json.dumps([sorted(self.item_coef.items()),
+                          self.launch_coef])
+        return hashlib.sha256(raw.encode()).hexdigest()[:12]
+
+    def to_json(self) -> Dict:
+        return {"schema": PROFILE_SCHEMA,
+                "item_coef": dict(self.item_coef),
+                "launch_coef": self.launch_coef,
+                "backend": self.backend,
+                "device_kind": self.device_kind,
+                "source": self.source,
+                "n_samples": self.n_samples,
+                "residual": self.residual}
+
+    @classmethod
+    def from_json(cls, d: Dict) -> "CalibrationProfile":
+        if d.get("schema") != PROFILE_SCHEMA:
+            raise ValueError(f"calibration profile schema "
+                             f"{d.get('schema')!r} != {PROFILE_SCHEMA}")
+        coef = {str(k): float(v) for k, v in d["item_coef"].items()}
+        if not coef or any(v < 0 for v in coef.values()):
+            raise ValueError("calibration profile has no/negative "
+                             "item coefficients")
+        return cls(coef, float(d["launch_coef"]), str(d.get("backend",
+                   "any")), str(d.get("device_kind", "any")),
+                   str(d.get("source", "measured")),
+                   int(d.get("n_samples", 0)),
+                   float(d.get("residual", 0.0)))
+
+
+DEFAULT_PROFILE = CalibrationProfile(dict(DEFAULT_ITEM_BYTES),
+                                     KERNEL_LAUNCH_COST)
+
+
+def resolve_profile(item_bytes: Optional[Mapping[str, float]] = None,
+                    profile: Optional[CalibrationProfile] = None
+                    ) -> CalibrationProfile:
+    """Back-compat shim for the selection entry points: an explicit
+    ``item_bytes`` dict (the historical API) overrides the profile's
+    item coefficients; no arguments means the default profile."""
+    base = profile if profile is not None else DEFAULT_PROFILE
+    if item_bytes is not None:
+        return replace(base, item_coef=dict(item_bytes),
+                       source="item_bytes")
+    return base
+
+
+# ---------------------------------------------------------------------------
+# Traffic features: the regressors the fit pairs with measured seconds
+# ---------------------------------------------------------------------------
+
+def traffic_features(g: Graph, dims: Dict[str, int]) -> Dict[str, float]:
+    """Items moved per kind plus the launch count — exactly the terms of
+    ``CalibrationProfile.cost``, so ``cost == coef . features``."""
+    t = C.traffic(g, dims)
+    f = {k: float(t.loads.get(k, 0) + t.stores.get(k, 0))
+         for k in set(ITEM_KINDS) | set(t.loads) | set(t.stores)}
+    f["launches"] = float(t.launches)
+    return f
+
+
+def region_features(g: Graph, dims: Dict[str, int]
+                    ) -> Optional[List[Dict[str, float]]]:
+    """Per-region feature rows of a snapshot, aligned with
+    ``selection.region_costs`` / the Pallas lowering order (the
+    partition is deterministic).  ``None`` when the program cannot be
+    partitioned."""
+    from repro.core import regions as R
+    try:
+        plan = R.plan_program(g)
+    except R.RegionError:
+        return None
+    return [traffic_features(spec.graph, dims) for spec in plan.regions]
+
+
+# ---------------------------------------------------------------------------
+# The fit: least-squares over measured region times
+# ---------------------------------------------------------------------------
+
+def fit_profile(feature_rows: Sequence[Mapping[str, float]],
+                times_s: Sequence[float], *,
+                backend: str = "any", device_kind: str = "any",
+                base: CalibrationProfile = DEFAULT_PROFILE
+                ) -> CalibrationProfile:
+    """Fit measured coefficients: ``times ~ features @ coef``.
+
+    Kinds with no signal in the samples (all-zero column) — or whose
+    fitted coefficient comes out non-positive, which a ranking model
+    cannot use — keep the default profile's coefficient rescaled into
+    the fitted unit system, so the profile stays a total cost model for
+    programs that move kinds the calibration run never exercised.
+    """
+    if len(feature_rows) != len(times_s) or not feature_rows:
+        raise ValueError("need equally many feature rows and times")
+    kinds = list(ITEM_KINDS)
+    for row in feature_rows:
+        for k in row:
+            if k != "launches" and k not in kinds:
+                kinds.append(k)
+    cols = kinds + ["launches"]
+    A = np.array([[float(row.get(c, 0.0)) for c in cols]
+                  for row in feature_rows], dtype=np.float64)
+    b = np.asarray(times_s, dtype=np.float64)
+    coef, *_ = np.linalg.lstsq(A, b, rcond=None)
+
+    base_vec = np.array([base.item_coef.get(c, base.item_coef.get(
+        "scalar", 1.0)) for c in kinds] + [base.launch_coef])
+    observed = A.any(axis=0)
+    good = observed & (coef > 0)
+    if not good.any():
+        warnings.warn("calibration fit produced no positive "
+                      "coefficients; keeping the default profile",
+                      RuntimeWarning, stacklevel=2)
+        return replace(base, backend=backend, device_kind=device_kind)
+    # unit bridge: how many fitted units one default unit is worth,
+    # taken as the median over the trustworthy coefficients
+    unit = float(np.median(coef[good] / base_vec[good]))
+    fitted = np.where(good, coef, base_vec * unit)
+    pred = A @ fitted
+    denom = float(np.sqrt(np.mean(b ** 2))) or 1.0
+    residual = float(np.sqrt(np.mean((pred - b) ** 2))) / denom
+    return CalibrationProfile(
+        {k: float(v) for k, v in zip(kinds, fitted[:-1])},
+        float(fitted[-1]), backend=backend, device_kind=device_kind,
+        source="measured", n_samples=len(times_s), residual=residual)
+
+
+# ---------------------------------------------------------------------------
+# Persistence: one JSON per (backend, device_kind) under the cache dir
+# ---------------------------------------------------------------------------
+
+def default_cache_root() -> Path:
+    """The kernel-cache root (shared with ``pipeline.cache``): profiles
+    live next to the plans they tune, under ``<root>/calibration/``."""
+    return Path(os.environ.get(
+        "REPRO_KERNEL_CACHE",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                     "kernels")))
+
+
+def device_kind(backend_hint: Optional[str] = None) -> str:
+    """Best-effort device identity for the profile key.  jax's device
+    kind when available (lazy import), else the machine name."""
+    try:
+        import jax
+        return str(jax.devices()[0].device_kind)
+    except Exception:
+        import platform
+        return platform.machine() or "cpu"
+
+
+def profile_path(root: Optional[os.PathLike], backend: str,
+                 dev: str) -> Path:
+    root = Path(root) if root is not None else default_cache_root()
+    safe = re.sub(r"[^A-Za-z0-9_.-]+", "-", dev) or "any"
+    return root / "calibration" / f"{backend}_{safe}.json"
+
+
+def save_profile(profile: CalibrationProfile,
+                 root: Optional[os.PathLike] = None) -> Path:
+    path = profile_path(root, profile.backend, profile.device_kind)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    tmp = path.with_suffix(".json.tmp")
+    tmp.write_text(json.dumps(profile.to_json(), indent=2))
+    tmp.replace(path)
+    return path
+
+
+def load_profile(root: Optional[os.PathLike] = None, *,
+                 backend: str, device_kind: str
+                 ) -> Optional[CalibrationProfile]:
+    """The saved profile for this (backend, device), or ``None`` — with
+    a warning when a file exists but is stale or corrupt."""
+    path = profile_path(root, backend, device_kind)
+    try:
+        raw = path.read_text()
+    except OSError:
+        return None
+    try:
+        return CalibrationProfile.from_json(json.loads(raw))
+    except (ValueError, KeyError, TypeError) as err:
+        warnings.warn(
+            f"ignoring stale/corrupt calibration profile {path}: {err}; "
+            "falling back to the default cost model", RuntimeWarning,
+            stacklevel=2)
+        return None
+
+
+def load_or_default(root: Optional[os.PathLike] = None, *,
+                    backend: str, device_kind: str
+                    ) -> CalibrationProfile:
+    return (load_profile(root, backend=backend, device_kind=device_kind)
+            or DEFAULT_PROFILE)

@@ -564,6 +564,8 @@ def emit_program(g: Graph, dims: Dict[str, int], blocks: Dict[str, int],
             tuple(blocks[d] for d in vt.dims[vt.lead_dims:])
             for vt in (g.nodes[i].vtype for i in g.input_ids)]
         fn, _, rep = _fallback_region(whole, dims, in_items, str(err))
+        fn.region_runners = [(whole, fn)]
+        fn.input_refs = [(i, 0) for i in g.input_ids]
         return fn, LoweringReport([rep])
     report = LoweringReport()
 
@@ -607,6 +609,11 @@ def emit_program(g: Graph, dims: Dict[str, int], blocks: Dict[str, int],
                 env[ref] = o
         return tuple(env[r] for r in out_refs)
 
+    # per-region callables for the timing harness: core/timing.py
+    # re-threads the same env and times each kernel standalone, pairing
+    # wall times with selection.region_costs entries (same plan order)
+    run.region_runners = lowered
+    run.input_refs = [(iid, 0) for iid in pp.graph.input_ids]
     return run, report
 
 

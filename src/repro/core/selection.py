@@ -14,21 +14,34 @@ describe so the framework is complete):
     block-count assignment per dimension and returns the best
     (dims, snapshot) pair — including the degenerate counts (N=1, K=1)
     that the paper notes eliminate Rule-6 work replication.
+
+The cost model's coefficients live in a ``calibrate.CalibrationProfile``
+(the default reproduces the historical constants; a *measured* profile is
+fitted from per-region kernel timings — see ``core/calibrate.py``).
+``autotune(objective="measured")`` closes the loop end-to-end: the
+(calibrated) analytic model prunes the sweep, and only the top-K
+survivors are actually run and timed — the wall-clock winner is
+returned.  ``pipeline.compile(..., autotune="measured")`` supplies the
+``measure`` callback (compile + synthetic inputs + the timing harness).
 """
 
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+import warnings
+from dataclasses import dataclass, replace
+from typing import (Callable, Dict, Iterable, List, Optional, Sequence,
+                    Tuple)
 
+from repro.core import calibrate as CAL
 from repro.core import cost as C
 from repro.core.fusion import fuse
 from repro.core.graph import Graph
 
-DEFAULT_ITEM_BYTES = {"block": 128 * 128 * 4, "vector": 128 * 4,
-                      "scalar": 4}
-KERNEL_LAUNCH_COST = 1e5  # bytes-equivalent of one kernel launch
+# single source of truth for the default coefficients is the default
+# CalibrationProfile; these names remain the public aliases
+DEFAULT_ITEM_BYTES = CAL.DEFAULT_ITEM_BYTES
+KERNEL_LAUNCH_COST = CAL.KERNEL_LAUNCH_COST
 
 
 @dataclass(frozen=True)
@@ -38,18 +51,29 @@ class Selected:
     dims: Dict[str, int]
     cost: float
     costs: Tuple[float, ...]  # per snapshot, for inspection
+    # objective="measured" only: the winner's wall seconds and every
+    # (dims, seconds) pair the autotuner timed — the analytic choice is
+    # always among them, so callers can verify measured <= analytic
+    measured_s: Optional[float] = None
+    timings: Tuple[Tuple[Tuple[Tuple[str, int], ...], float], ...] = ()
 
 
 def snapshot_cost(g: Graph, dims: Dict[str, int],
-                  item_bytes: Optional[Dict[str, int]] = None) -> float:
-    item_bytes = item_bytes or DEFAULT_ITEM_BYTES
-    t = C.traffic(g, dims)
-    return t.bytes_moved(item_bytes) + KERNEL_LAUNCH_COST * t.launches
+                  item_bytes: Optional[Dict[str, int]] = None,
+                  profile: Optional[CAL.CalibrationProfile] = None
+                  ) -> float:
+    """Cost of one snapshot under a calibration profile (default: the
+    historical constants; pass a measured profile — or the legacy
+    ``item_bytes`` dict, which overrides its item coefficients)."""
+    prof = CAL.resolve_profile(item_bytes, profile)
+    return prof.cost(C.traffic(g, dims))
 
 
 def region_costs(g: Graph, dims: Dict[str, int],
                  item_bytes: Optional[Dict[str, int]] = None,
-                 plan=None) -> Optional[Tuple[float, ...]]:
+                 plan=None,
+                 profile: Optional[CAL.CalibrationProfile] = None
+                 ) -> Optional[Tuple[float, ...]]:
     """Per-region traffic attribution of one snapshot.
 
     The Pallas backend executes a snapshot as its region partition
@@ -58,7 +82,8 @@ def region_costs(g: Graph, dims: Dict[str, int],
     ``snapshot_cost`` of one region's standalone program (its loads
     include re-reading cross-region inputs, its launch count is exactly
     one), so the tuple is the honest per-kernel cost breakdown of what
-    actually runs — the basis for timing-based calibration later.
+    actually runs — ``core/timing.region_times`` pairs each entry with
+    that kernel's wall time, which is what ``core/calibrate.py`` fits.
     Returns ``None`` for programs the partitioner cannot split
     (MiscNode-bearing graphs take the whole-program fallback).  Pass a
     precomputed ``regions.ProgramPlan`` via ``plan`` to avoid
@@ -69,35 +94,105 @@ def region_costs(g: Graph, dims: Dict[str, int],
             plan = R.plan_program(g)
         except R.RegionError:
             return None
-    return tuple(snapshot_cost(spec.graph, dims, item_bytes)
+    return tuple(snapshot_cost(spec.graph, dims, item_bytes, profile)
                  for spec in plan.regions)
 
 
 def select(g: Graph, dims: Dict[str, int],
            item_bytes: Optional[Dict[str, int]] = None,
-           snapshots: Optional[List[Graph]] = None) -> Selected:
+           snapshots: Optional[List[Graph]] = None,
+           profile: Optional[CAL.CalibrationProfile] = None) -> Selected:
     """Fuse (if needed) and pick the cheapest snapshot for fixed dims."""
     snaps = snapshots if snapshots is not None else fuse(g)
-    costs = tuple(snapshot_cost(s, dims, item_bytes) for s in snaps)
+    costs = tuple(snapshot_cost(s, dims, item_bytes, profile)
+                  for s in snaps)
     i = min(range(len(costs)), key=costs.__getitem__)
     return Selected(i, snaps[i], dict(dims), costs[i], costs)
 
 
-def autotune(g: Graph, dim_candidates: Dict[str, Sequence[int]],
-             item_bytes: Optional[Dict[str, int]] = None,
-             snapshots: Optional[List[Graph]] = None) -> Selected:
-    """Sweep block-count assignments (the paper's block-shape choice) and
-    return the globally cheapest (dims, snapshot).  The fusion algorithm is
-    invoked ONCE — its choices don't depend on block shapes (paper §1).
-    Callers that already ran ``fuse`` (e.g. ``pipeline.compile``) pass the
-    snapshot list via ``snapshots`` to avoid re-fusing."""
-    snaps = snapshots if snapshots is not None else fuse(g)
-    best: Optional[Selected] = None
+def _dims_key(dims: Dict[str, int]) -> Tuple[Tuple[str, int], ...]:
+    return tuple(sorted(dims.items()))
+
+
+def sweep_assignments(dim_candidates: Dict[str, Sequence[int]]
+                      ) -> Iterable[Dict[str, int]]:
+    """The deduplicated block-count grid: assignments that would produce
+    an identical ``(Graph.fingerprint(), dims)`` compile key — e.g. from
+    repeated candidate values — are yielded exactly once, so they are
+    costed (and measured) once."""
     names = sorted(dim_candidates)
+    seen = set()
     for combo in itertools.product(*(dim_candidates[n] for n in names)):
         dims = dict(zip(names, combo))
-        sel = select(g, dims, item_bytes, snapshots=snaps)
-        if best is None or sel.cost < best.cost:
-            best = sel
-    assert best is not None
-    return best
+        key = _dims_key(dims)
+        if key in seen:
+            continue
+        seen.add(key)
+        yield dims
+
+
+def autotune(g: Graph, dim_candidates: Dict[str, Sequence[int]],
+             item_bytes: Optional[Dict[str, int]] = None,
+             snapshots: Optional[List[Graph]] = None, *,
+             objective: str = "analytic",
+             profile: Optional[CAL.CalibrationProfile] = None,
+             measure: Optional[Callable[[Selected], float]] = None,
+             top_k: int = 3) -> Selected:
+    """Sweep block-count assignments (the paper's block-shape choice) and
+    return the globally cheapest (dims, snapshot).  The fusion algorithm
+    is invoked ONCE — its choices don't depend on block shapes (paper
+    §1).  Callers that already ran ``fuse`` (e.g. ``pipeline.compile``)
+    pass the snapshot list via ``snapshots`` to avoid re-fusing.
+
+    ``objective="analytic"`` (default) ranks by the calibrated traffic
+    model alone.  ``objective="measured"`` uses the analytic model only
+    to *prune*: the ``top_k`` cheapest distinct assignments are handed
+    to ``measure`` (compile + run + time; built by ``pipeline.compile``)
+    and the wall-clock winner is returned, with its seconds in
+    ``Selected.measured_s`` and every timed candidate in
+    ``Selected.timings``.  The analytic winner is always measured, so
+    the result is never slower than the analytic choice (ties allowed);
+    candidates that fail to compile or time are skipped with a warning,
+    and if every measurement fails the analytic choice is returned.
+    """
+    if objective not in ("analytic", "measured"):
+        raise ValueError(f"unknown objective {objective!r}; "
+                         "one of ('analytic', 'measured')")
+    if objective == "measured" and measure is None:
+        raise ValueError(
+            "objective='measured' needs a measure callback; call through "
+            "pipeline.compile(..., autotune='measured'), which builds it")
+    snaps = snapshots if snapshots is not None else fuse(g)
+    cands: List[Selected] = []
+    for dims in sweep_assignments(dim_candidates):
+        cands.append(select(g, dims, item_bytes, snapshots=snaps,
+                            profile=profile))
+    if not cands:
+        raise ValueError("empty dim_candidates sweep")
+    # stable: equal analytic costs keep sweep order, so the analytic
+    # winner is always finalists[0]
+    cands.sort(key=lambda s: s.cost)
+    if objective == "analytic":
+        return cands[0]
+
+    finalists = cands[:max(1, top_k)]
+    timed: List[Tuple[float, Selected]] = []
+    for sel in finalists:
+        try:
+            t = float(measure(sel))
+        except Exception as err:  # a candidate that cannot run is skipped
+            warnings.warn(f"measured autotune: skipping {sel.dims} "
+                          f"({type(err).__name__}: {err})", RuntimeWarning,
+                          stacklevel=2)
+            continue
+        if not (t > 0.0 and t < float("inf")):
+            continue
+        timed.append((t, sel))
+    if not timed:
+        warnings.warn("measured autotune: every measurement failed; "
+                      "returning the analytic choice", RuntimeWarning,
+                      stacklevel=2)
+        return cands[0]
+    timings = tuple((_dims_key(sel.dims), t) for t, sel in timed)
+    t_best, best = min(timed, key=lambda p: p[0])
+    return replace(best, measured_s=t_best, timings=timings)

@@ -1,0 +1,226 @@
+"""Wall-clock kernel timing: the measurement half of the
+predict -> run -> measure -> recalibrate loop.
+
+* :func:`time_callable` — the robust harness every measurement goes
+  through: warmup calls first (compilation, tracing), then median-of-K
+  timed calls, each fenced with ``jax.block_until_ready`` so async
+  dispatch cannot leak work across the stopwatch.
+* :func:`region_times` — per-kernel timing of a compiled
+  ``pipeline.CompiledKernel`` on the Pallas backend: each region of the
+  ``ProgramPlan`` is timed standalone (inputs threaded exactly as the
+  real execution threads them), so entry *i* pairs with entry *i* of
+  ``CompiledKernel.region_costs`` — the (features, seconds) samples
+  ``core/calibrate.py`` fits.
+* :func:`synth_inputs` — synthetic merged inputs for a program at given
+  dims/block extents (position vectors get ``arange``, data gets scaled
+  normals), shared by the measured autotuner and the benchmarks.
+* :func:`measured` — a process-wide measurement memo keyed by
+  ``(fingerprint, dims, backend, device, ...)`` so the autotuner never
+  times the same configuration twice.
+* :func:`spearman` — rank agreement between predicted and measured
+  orderings (the calibration acceptance metric).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.blocks import merged_shape
+from repro.core.graph import Graph
+
+# names that carry global positions, not data (the attention programs'
+# query/key position vectors) — synthetic inputs must keep them ordinal
+POSITION_INPUTS = ("QP", "KP")
+
+
+def _sync(out) -> None:
+    """Block until ``out`` (any pytree of arrays) is actually computed;
+    numpy leaves pass through untouched."""
+    try:
+        import jax
+        jax.block_until_ready(out)
+    except ImportError:  # pragma: no cover - jax is a hard dep in-repo
+        pass
+
+
+@dataclass(frozen=True)
+class TimingResult:
+    times_s: Tuple[float, ...]
+
+    @property
+    def median_s(self) -> float:
+        return float(np.median(self.times_s))
+
+    @property
+    def best_s(self) -> float:
+        return float(min(self.times_s))
+
+
+def time_callable(fn: Callable, *args, warmup: int = 1, repeats: int = 5,
+                  **kwargs) -> TimingResult:
+    """Median-of-``repeats`` wall time of ``fn(*args, **kwargs)`` after
+    ``warmup`` untimed calls; every call is fenced."""
+    for _ in range(max(warmup, 0)):
+        _sync(fn(*args, **kwargs))
+    times = []
+    for _ in range(max(repeats, 1)):
+        t0 = time.perf_counter()
+        _sync(fn(*args, **kwargs))
+        times.append(time.perf_counter() - t0)
+    return TimingResult(tuple(times))
+
+
+# ---------------------------------------------------------------------------
+# Synthetic inputs
+# ---------------------------------------------------------------------------
+
+def stack_dims(g: Graph) -> frozenset:
+    """Dims that appear as leading stack axes of some program input —
+    the Pallas backend requires block size 1 for them."""
+    out = set()
+    for nid in g.input_ids:
+        vt = g.nodes[nid].vtype
+        out.update(vt.dims[:vt.lead_dims])
+    return frozenset(out)
+
+
+def synth_blocks(g: Graph, dims: Dict[str, int],
+                 item: int = 8) -> Dict[str, int]:
+    """A valid per-dim block-extent map for ``g``: ``item`` everywhere,
+    1 on stack dims (the Pallas constraint)."""
+    sd = stack_dims(g)
+    return {d: (1 if d in sd else item) for d in dims}
+
+
+def synth_inputs(g: Graph, dims: Dict[str, int],
+                 blocks: Optional[Dict[str, int]] = None, *,
+                 item: int = 8, seed: int = 0) -> Dict[str, np.ndarray]:
+    """Random merged input arrays for ``g`` at ``dims`` with per-dim
+    block extents ``blocks`` (default: :func:`synth_blocks`).  Data
+    inputs are normals scaled by the contraction width; position inputs
+    get ``arange`` so causal masks stay meaningful."""
+    rng = np.random.default_rng(seed)
+    blocks = blocks if blocks is not None else synth_blocks(g, dims, item)
+    out = {}
+    for nid in g.input_ids:
+        node = g.nodes[nid]
+        vt = node.vtype
+        ish = tuple(blocks.get(d, item) for d in vt.dims[vt.lead_dims:])
+        shape = merged_shape(vt, ish, dims)
+        if node.name in POSITION_INPUTS:
+            out[node.name] = np.arange(shape[0], dtype=np.float32)
+        else:
+            out[node.name] = (rng.normal(size=shape)
+                              / max(shape[-1], 1) ** 0.5
+                              ).astype(np.float32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Per-region timing of a compiled plan
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class RegionTime:
+    label: str
+    result: TimingResult
+
+    @property
+    def median_s(self) -> float:
+        return self.result.median_s
+
+
+def region_times(kern, inputs: Dict[str, Any], *, warmup: int = 1,
+                 repeats: int = 5) -> Optional[List[RegionTime]]:
+    """Wall time of each region kernel of a compiled Pallas
+    ``CompiledKernel``, in plan order — entry *i* pairs with
+    ``kern.region_costs[i]`` and ``kern.lowering_report.regions[i]``.
+
+    The regions are executed in topological order with real
+    intermediates threaded between them (exactly what ``kern(inputs)``
+    does), but each region is warmed up and timed standalone.  Returns
+    ``None`` for kernels that do not expose region runners (py/jax
+    backends)."""
+    raw = getattr(getattr(kern, "_fn", None), "raw_program", None)
+    runners = getattr(raw, "region_runners", None)
+    if runners is None:
+        return None
+    merged = [inputs[nm] for nm in kern.in_names]
+    env: Dict[Tuple[int, int], Any] = dict(zip(raw.input_refs, merged))
+    out: List[RegionTime] = []
+    for spec, fn in runners:
+        args = [env[r] for r in spec.in_refs]
+        # the first warmup call doubles as the real execution whose
+        # outputs thread into downstream regions — no extra call
+        outs = fn(*args)
+        _sync(outs)
+        for ref, o in zip(spec.out_refs, outs):
+            env[ref] = o
+        res = time_callable(fn, *args, warmup=max(warmup - 1, 0),
+                            repeats=repeats)
+        out.append(RegionTime(spec.label, res))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Measurement memo
+# ---------------------------------------------------------------------------
+
+_MEASUREMENTS: Dict[Tuple, float] = {}
+
+
+def measured(key: Tuple, thunk: Callable[[], float]) -> float:
+    """Process-wide memo: run ``thunk`` (seconds) once per ``key``.
+    Keys embed everything the measurement depends on — graph
+    fingerprint, dims, backend, device, problem extents — so re-sweeps
+    and overlapping top-K sets never re-time a configuration."""
+    if key not in _MEASUREMENTS:
+        _MEASUREMENTS[key] = float(thunk())
+    return _MEASUREMENTS[key]
+
+
+def clear_measurements() -> None:
+    """Drop the memo (tests)."""
+    _MEASUREMENTS.clear()
+
+
+def measurement_count() -> int:
+    return len(_MEASUREMENTS)
+
+
+# ---------------------------------------------------------------------------
+# Rank agreement
+# ---------------------------------------------------------------------------
+
+def _ranks(v: Sequence[float]) -> np.ndarray:
+    a = np.asarray(v, dtype=np.float64)
+    order = np.argsort(a, kind="stable")
+    ranks = np.empty(len(a), dtype=np.float64)
+    ranks[order] = np.arange(len(a), dtype=np.float64)
+    # average ties so equal values cannot fake agreement
+    for val in np.unique(a):
+        m = a == val
+        if m.sum() > 1:
+            ranks[m] = ranks[m].mean()
+    return ranks
+
+
+def spearman(pred: Sequence[float], meas: Sequence[float]) -> float:
+    """Spearman rank correlation between a predicted and a measured
+    ordering.  Fewer than two samples is vacuous agreement (1.0); one
+    constant side against a varying one is no agreement (0.0)."""
+    if len(pred) != len(meas):
+        raise ValueError("length mismatch")
+    if len(pred) < 2:
+        return 1.0
+    rp, rm = _ranks(pred), _ranks(meas)
+    sp, sm = rp.std(), rm.std()
+    if sp == 0.0 and sm == 0.0:
+        return 1.0
+    if sp == 0.0 or sm == 0.0:
+        return 0.0
+    return float(np.corrcoef(rp, rm)[0, 1])

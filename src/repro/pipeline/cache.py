@@ -94,6 +94,9 @@ class CachePlan:
     # per-region traffic attribution of the selected snapshot (pallas
     # backend: one entry per emitted kernel), None for other backends
     region_costs: Optional[Tuple[float, ...]] = None
+    # wall seconds of the winning config when the plan came from a
+    # measured autotune sweep (optional key; absent in older entries)
+    measured_s: Optional[float] = None
 
     def to_json(self) -> Dict[str, Any]:
         d = asdict(self)
@@ -105,10 +108,12 @@ class CachePlan:
     @classmethod
     def from_json(cls, d: Dict[str, Any]) -> "CachePlan":
         rc = d.get("region_costs")
+        ms = d.get("measured_s")
         return cls(int(d["snapshot_index"]), dict(d["dims"]),
                    float(d["cost"]), tuple(d["costs"]),
                    float(d["initial_cost"]),
-                   tuple(rc) if rc is not None else None)
+                   tuple(rc) if rc is not None else None,
+                   float(ms) if ms is not None else None)
 
 
 @dataclass
@@ -123,10 +128,10 @@ class KernelCache:
                  disk: bool = True,
                  max_disk_bytes: Optional[int] = None):
         if root is None:
-            root = os.environ.get(
-                "REPRO_KERNEL_CACHE",
-                os.path.join(os.path.expanduser("~"), ".cache", "repro",
-                             "kernels"))
+            # shared with core/calibrate.py: calibration profiles live
+            # under <root>/calibration/, next to the plans they tune
+            from repro.core.calibrate import default_cache_root
+            root = default_cache_root()
         if max_disk_bytes is None:
             max_disk_bytes = int(os.environ.get(
                 "REPRO_KERNEL_CACHE_MAX_BYTES", DEFAULT_MAX_DISK_BYTES))

@@ -40,10 +40,12 @@ from __future__ import annotations
 import functools
 import warnings
 from dataclasses import dataclass, replace
+from math import lcm
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import calibrate as CAL
 from repro.core import selection as SEL
 from repro.core.fusion import FusionTrace, fuse
 from repro.core.graph import Graph
@@ -52,6 +54,7 @@ from repro.pipeline.cache import (CacheKey, CachePlan, KernelCache,
                                   default_cache)
 
 BACKENDS = ("py", "jax", "pallas")
+AUTOTUNE_OBJECTIVES = ("analytic", "measured")
 
 
 @dataclass
@@ -75,6 +78,11 @@ class CompiledKernel:
     # traffic attribution of the selected snapshot
     lowering_report: Optional[Any] = None
     region_costs: Optional[Tuple[float, ...]] = None
+    # autotune="measured" only: the winner's wall seconds and every
+    # (dims, seconds) candidate the autotuner timed (the analytic choice
+    # is always among them)
+    measured_s: Optional[float] = None
+    autotune_timings: Optional[Tuple] = None
 
     def __call__(self, inputs: Dict[str, Any]) -> Dict[str, Any]:
         missing = [n for n in self.in_names if n not in inputs]
@@ -171,7 +179,73 @@ def _lower_pallas(g: Graph, dims: Dict[str, int],
         outs = f(*[inputs[nm] for nm, _ in in_info])
         return {nm: o for (nm, _), o in zip(out_info, outs)}
 
+    # the raw emit_program callable carries the per-region runners the
+    # timing harness (core/timing.region_times) needs
+    call.raw_program = f
     return call, report
+
+
+def _measure_harness(graph: Graph,
+                     dim_candidates: Dict[str, Sequence[int]], *,
+                     backend: str, blocks: Optional[Dict[str, int]],
+                     interpret, jit: bool,
+                     item_bytes: Optional[Dict[str, int]],
+                     profile, fused: bool, cache: KernelCache,
+                     repeats: int) -> Callable:
+    """The ``measure`` callback ``selection.autotune(objective=
+    "measured")`` calls for each top-K survivor: compile the candidate
+    through this same driver (so the in-process kernel cache absorbs
+    repeats) and time it end-to-end on synthetic inputs.
+
+    Every candidate runs the SAME total problem: per dim the total
+    extent is a base block extent (the caller's ``blocks``, else 8;
+    1 for stack dims) times the lcm of the candidate counts, and each
+    candidate's block extent is ``total // count`` — varying the block
+    *count* at fixed problem size, which is the choice the paper's
+    selector owns.  Measurements are memoized process-wide
+    (``timing.measured``) keyed by (fingerprint, dims, backend, device,
+    totals), so re-sweeps never re-time a configuration."""
+    from repro.core import timing as T
+    sd = T.stack_dims(graph)
+    base = {d: (1 if d in sd else (blocks or {}).get(d, 8))
+            for d in dim_candidates}
+    total = {d: base[d] * lcm(*{int(c) for c in dim_candidates[d]})
+             for d in dim_candidates}
+    dev = CAL.device_kind()
+    fp = graph.fingerprint()
+    kernels: Dict[Tuple, CompiledKernel] = {}
+
+    def measure(sel) -> float:
+        cand_blocks = {d: total[d] // sel.dims[d] for d in sel.dims}
+        bad = [d for d in sd
+               if d in cand_blocks and cand_blocks[d] != 1]
+        if bad:
+            raise ValueError(
+                f"stack dims {bad} need equal candidate counts (block "
+                "size is pinned to 1)")
+        dkey = tuple(sorted(sel.dims.items()))
+        # everything the wall time depends on is in the memo key —
+        # notably interpret mode (orders of magnitude slower) and the
+        # repeat count
+        mkey = (fp, dkey, backend, dev, tuple(sorted(total.items())),
+                bool(jit), fused, interpret, repeats)
+
+        def thunk() -> float:
+            kern = compile(graph, dict(sel.dims), backend=backend,
+                           blocks=(cand_blocks if backend == "pallas"
+                                   else blocks),
+                           item_bytes=item_bytes, fused=fused,
+                           interpret=interpret, jit=jit, profile=profile,
+                           cache=cache)
+            kernels[dkey] = kern
+            inputs = T.synth_inputs(graph, sel.dims, cand_blocks)
+            return T.time_callable(kern, inputs, warmup=1,
+                                   repeats=repeats).median_s
+
+        return T.measured(mkey, thunk)
+
+    measure.kernels = kernels
+    return measure
 
 
 def compile(graph: Graph, dims: Optional[Dict[str, int]] = None, *,
@@ -182,7 +256,11 @@ def compile(graph: Graph, dims: Optional[Dict[str, int]] = None, *,
             fused: bool = True,
             interpret=None,
             jit: bool = True,
-            cache: Optional[KernelCache] = None) -> CompiledKernel:
+            cache: Optional[KernelCache] = None,
+            autotune: str = "analytic",
+            profile: Optional[CAL.CalibrationProfile] = None,
+            top_k: int = 3,
+            measure_repeats: int = 3) -> CompiledKernel:
     """Compile a block program into an executing, cached kernel.
 
     Either ``dims`` (fixed block counts -> ``selection.select``) or
@@ -190,12 +268,36 @@ def compile(graph: Graph, dims: Optional[Dict[str, int]] = None, *,
     also picks the dims) must be given.  ``fused=False`` skips the fusion
     algorithm — the unfused Table-2 program compiles as-is; that is the
     benchmark baseline.
+
+    ``autotune="measured"`` (with ``dim_candidates``) closes the
+    predict -> run -> measure loop: the calibrated analytic model prunes
+    the sweep, the ``top_k`` cheapest distinct candidates are compiled
+    and *timed* (median of ``measure_repeats`` fenced calls on synthetic
+    inputs at a fixed total problem size), and the wall-clock winner is
+    what lowers, caches, and re-loads.  ``profile`` overrides the
+    calibration profile; by default the measured path loads the one
+    fitted for this (backend, device) from the cache dir if a
+    calibration run saved one — ``benchmarks/run.py --only pipeline``
+    fits a ``backend="pallas"`` profile from per-region timings; other
+    backends keep the default constants until calibrated (see
+    ``core/calibrate.py``).  The analytic path always keeps the
+    deterministic defaults.
     """
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
     if dims is None and dim_candidates is None:
         raise ValueError("pass dims= (fixed) or dim_candidates= (autotune)")
+    if autotune not in AUTOTUNE_OBJECTIVES:
+        raise ValueError(f"unknown autotune objective {autotune!r}; "
+                         f"one of {AUTOTUNE_OBJECTIVES}")
+    if autotune == "measured" and dim_candidates is None:
+        raise ValueError("autotune='measured' needs dim_candidates=")
     cache = cache if cache is not None else default_cache()
+    if profile is None and autotune == "measured":
+        # the measured path runs under the calibrated cost model fitted
+        # for this backend+device (default constants if none saved)
+        profile = CAL.load_or_default(cache.root, backend=backend,
+                                      device_kind=CAL.device_kind())
 
     # autotune keys embed the full candidate sweep, so two sweeps over the
     # same dim names but different candidate sets never collide
@@ -212,6 +314,13 @@ def compile(graph: Graph, dims: Optional[Dict[str, int]] = None, *,
         opts += (("interpret", interpret),)
     if item_bytes:
         opts += (("item_bytes", tuple(sorted(item_bytes.items()))),)
+    if dim_candidates is not None and autotune != "analytic":
+        opts += (("autotune", autotune),)
+    if (profile is not None
+            and profile.digest() != CAL.DEFAULT_PROFILE.digest()):
+        # a different calibration profile can select a different
+        # snapshot/dims: never serve its plan under the default's key
+        opts += (("profile", profile.digest()),)
     key = CacheKey.make(graph.fingerprint(), backend, key_dims, blocks,
                         fused, opts)
     hit = cache.get_kernel(key)
@@ -221,6 +330,8 @@ def compile(graph: Graph, dims: Optional[Dict[str, int]] = None, *,
     plan, selected_graph = cache.get_plan(key)
     snaps: Optional[List[Graph]] = None
     pplan = None  # shared region partition (pallas cache-miss path)
+    timings = None
+    measure = None
     if plan is None:
         # -- the full pipeline: fuse -> select/autotune --------------------
         if fused:
@@ -229,10 +340,23 @@ def compile(graph: Graph, dims: Optional[Dict[str, int]] = None, *,
         else:
             snaps = [graph.clone()]
         if dim_candidates is not None:
-            sel = SEL.autotune(graph, dim_candidates, item_bytes,
-                               snapshots=snaps)
+            if autotune == "measured":
+                measure = _measure_harness(
+                    graph, dim_candidates, backend=backend, blocks=blocks,
+                    interpret=interpret, jit=jit, item_bytes=item_bytes,
+                    profile=profile, fused=fused, cache=cache,
+                    repeats=measure_repeats)
+                sel = SEL.autotune(graph, dim_candidates, item_bytes,
+                                   snapshots=snaps, objective="measured",
+                                   profile=profile, measure=measure,
+                                   top_k=top_k)
+                timings = sel.timings
+            else:
+                sel = SEL.autotune(graph, dim_candidates, item_bytes,
+                                   snapshots=snaps, profile=profile)
         else:
-            sel = SEL.select(graph, dims, item_bytes, snapshots=snaps)
+            sel = SEL.select(graph, dims, item_bytes, snapshots=snaps,
+                             profile=profile)
         selected_graph = snaps[sel.snapshot_index]
         # per-region traffic attribution of the snapshot that will run
         # (pallas partitions it into one kernel per region; the same
@@ -241,12 +365,13 @@ def compile(graph: Graph, dims: Optional[Dict[str, int]] = None, *,
         if backend == "pallas":
             pplan = _region_plan(selected_graph)
             rcosts = (SEL.region_costs(selected_graph, sel.dims,
-                                       item_bytes, plan=pplan)
+                                       item_bytes, plan=pplan,
+                                       profile=profile)
                       if pplan is not None else None)
         plan = CachePlan(sel.snapshot_index, sel.dims, sel.cost,
                          sel.costs, SEL.snapshot_cost(graph, sel.dims,
-                                                      item_bytes),
-                         region_costs=rcosts)
+                                                      item_bytes, profile),
+                         region_costs=rcosts, measured_s=sel.measured_s)
         cache.put_plan(key, plan, selected_graph)
         cache_hit = None
     else:
@@ -259,8 +384,20 @@ def compile(graph: Graph, dims: Optional[Dict[str, int]] = None, *,
     use_dims = plan.dims
 
     # -- backend lowering: the selected snapshot, nothing else --------------
-    report = None
-    if backend == "py":
+    # the measured sweep already compiled its candidates through this
+    # driver; if the winner's kernel is lowering-identical to what we
+    # would emit (same backend, and for pallas the same block extents),
+    # reuse it instead of recompiling the same plan
+    fn = report = None
+    if measure is not None:
+        cand = measure.kernels.get(tuple(sorted(use_dims.items())))
+        if cand is not None and (
+                backend != "pallas"
+                or cand.blocks == (dict(blocks) if blocks else None)):
+            fn, report = cand._fn, cand.lowering_report
+    if fn is not None:
+        pass
+    elif backend == "py":
         fn = _lower_py(selected_graph, use_dims)
     elif backend == "jax":
         fn = _lower_jax(selected_graph, use_dims, jit)
@@ -276,6 +413,7 @@ def compile(graph: Graph, dims: Optional[Dict[str, int]] = None, *,
         initial_cost=plan.initial_cost, cache_hit=cache_hit,
         in_names=[n for n, _ in in_info],
         out_names=[n for n, _ in out_info], _fn=fn,
-        lowering_report=report, region_costs=plan.region_costs)
+        lowering_report=report, region_costs=plan.region_costs,
+        measured_s=plan.measured_s, autotune_timings=timings)
     cache.put_kernel(key, kern)
     return kern

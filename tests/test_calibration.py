@@ -1,0 +1,246 @@
+"""Calibration of the traffic cost model (``core/calibrate.py``).
+
+* the default profile IS the historical constants (single source of
+  truth for ``selection.DEFAULT_ITEM_BYTES``/``KERNEL_LAUNCH_COST``);
+* synthetic timings generated from known coefficients are recovered by
+  the least-squares fit (tolerance-bounded), including the
+  scaled-default fallback for item kinds the samples never exercised;
+* profiles round-trip through the cache dir, and a stale or corrupt
+  profile falls back to the defaults with a warning;
+* the committed ``BENCH_pipeline.json`` artifact carries wall-clock
+  speedups for all five programs and a calibrated predicted-vs-measured
+  region ranking with Spearman >= 0.6 (the acceptance metric).
+"""
+
+import json
+from dataclasses import replace
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import array_program as AP
+from repro.core import calibrate as CAL
+from repro.core import cost as C
+from repro.core import selection as SEL
+from repro.core import timing as T
+from repro.core.fusion import fuse
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+# ---------------------------------------------------------------------------
+# Default profile == the historical constants
+# ---------------------------------------------------------------------------
+
+def test_default_profile_is_single_source_of_truth():
+    assert SEL.DEFAULT_ITEM_BYTES is CAL.DEFAULT_ITEM_BYTES
+    assert SEL.KERNEL_LAUNCH_COST == CAL.KERNEL_LAUNCH_COST
+    assert dict(CAL.DEFAULT_PROFILE.item_coef) == dict(
+        CAL.DEFAULT_ITEM_BYTES)
+    assert CAL.DEFAULT_PROFILE.launch_coef == CAL.KERNEL_LAUNCH_COST
+
+
+def test_snapshot_cost_default_matches_historical_formula():
+    g = AP.attention_program(0.125)
+    dims = {"M": 2, "D": 2, "N": 3, "L": 2}
+    t = C.traffic(g, dims)
+    expect = (t.bytes_moved(CAL.DEFAULT_ITEM_BYTES)
+              + CAL.KERNEL_LAUNCH_COST * t.launches)
+    assert SEL.snapshot_cost(g, dims) == expect
+    # a profile with doubled coefficients doubles the cost exactly
+    doubled = replace(
+        CAL.DEFAULT_PROFILE,
+        item_coef={k: 2 * v for k, v in CAL.DEFAULT_ITEM_BYTES.items()},
+        launch_coef=2 * CAL.KERNEL_LAUNCH_COST)
+    assert SEL.snapshot_cost(g, dims, profile=doubled) == 2 * expect
+    # the legacy item_bytes dict still overrides
+    ones = {"block": 1, "vector": 1, "scalar": 1}
+    assert SEL.snapshot_cost(g, dims, item_bytes=ones) == (
+        t.bytes_moved(ones) + CAL.KERNEL_LAUNCH_COST * t.launches)
+
+
+def test_region_features_pair_with_region_costs():
+    """``profile.predict`` on a region's feature row IS that region's
+    ``snapshot_cost`` — the fit regresses against the exact terms the
+    selector sums."""
+    g = fuse(AP.attention_program(0.125))[0]
+    dims = {"M": 2, "D": 2, "N": 3, "L": 2}
+    feats = CAL.region_features(g, dims)
+    costs = SEL.region_costs(g, dims)
+    assert feats is not None and costs is not None
+    assert len(feats) == len(costs) >= 2
+    for f, c in zip(feats, costs):
+        assert CAL.DEFAULT_PROFILE.predict(f) == pytest.approx(c)
+
+
+# ---------------------------------------------------------------------------
+# The fit
+# ---------------------------------------------------------------------------
+
+def _rows(rng, n=40):
+    rows = []
+    for _ in range(n):
+        rows.append({"block": float(rng.integers(1, 200)),
+                     "vector": float(rng.integers(0, 50)),
+                     "scalar": float(rng.integers(0, 10)),
+                     "launches": 1.0})
+    return rows
+
+
+def test_fit_recovers_known_coefficients():
+    rng = np.random.default_rng(7)
+    rows = _rows(rng)
+    true = {"block": 3e-5, "vector": 2e-6, "scalar": 1e-7,
+            "launches": 4e-4}
+    times = [sum(true[k] * v for k, v in r.items()) for r in rows]
+    prof = CAL.fit_profile(rows, times, backend="pallas",
+                           device_kind="testdev")
+    assert prof.source == "measured"
+    assert prof.n_samples == len(rows)
+    assert prof.residual < 1e-6
+    for k in ("block", "vector", "scalar"):
+        assert prof.item_coef[k] == pytest.approx(true[k], rel=1e-6)
+    assert prof.launch_coef == pytest.approx(true["launches"], rel=1e-6)
+    # the fitted model reproduces every sample
+    for r, t in zip(rows, times):
+        assert prof.predict(r) == pytest.approx(t, rel=1e-6)
+
+
+def test_fit_scales_default_for_unobserved_kind():
+    """A kind the calibration run never moved keeps the default
+    profile's coefficient, rescaled into the fitted unit system."""
+    rng = np.random.default_rng(3)
+    rows = _rows(rng)
+    for r in rows:
+        r["vector"] = 0.0
+    unit = 2.0  # fitted units are exactly 2x the default's
+    times = [unit * (CAL.DEFAULT_ITEM_BYTES["block"] * r["block"]
+                     + CAL.DEFAULT_ITEM_BYTES["scalar"] * r["scalar"]
+                     + CAL.KERNEL_LAUNCH_COST * r["launches"])
+             for r in rows]
+    prof = CAL.fit_profile(rows, times)
+    assert prof.item_coef["block"] == pytest.approx(
+        unit * CAL.DEFAULT_ITEM_BYTES["block"], rel=1e-6)
+    assert prof.item_coef["vector"] == pytest.approx(
+        unit * CAL.DEFAULT_ITEM_BYTES["vector"], rel=1e-6)
+
+
+def test_fit_degenerate_samples_keep_default_with_warning():
+    rows = [{"block": 1.0, "launches": 1.0}] * 4
+    with pytest.warns(RuntimeWarning, match="no positive"):
+        prof = CAL.fit_profile(rows, [0.0] * 4, backend="pallas",
+                               device_kind="x")
+    assert dict(prof.item_coef) == dict(CAL.DEFAULT_ITEM_BYTES)
+    assert prof.launch_coef == CAL.KERNEL_LAUNCH_COST
+    assert prof.backend == "pallas" and prof.device_kind == "x"
+
+
+def test_fit_input_validation():
+    with pytest.raises(ValueError):
+        CAL.fit_profile([], [])
+    with pytest.raises(ValueError):
+        CAL.fit_profile([{"block": 1.0}], [1.0, 2.0])
+
+
+# ---------------------------------------------------------------------------
+# Persistence
+# ---------------------------------------------------------------------------
+
+def test_profile_roundtrips_through_cache_dir(tmp_path):
+    rng = np.random.default_rng(11)
+    rows = _rows(rng)
+    times = [3e-5 * r["block"] + 1e-6 * r["vector"]
+             + 1e-7 * r["scalar"] + 2e-4 for r in rows]
+    prof = CAL.fit_profile(rows, times, backend="pallas",
+                           device_kind="Fake TPU v9")
+    path = CAL.save_profile(prof, root=tmp_path)
+    assert path.is_file() and path.parent.name == "calibration"
+    back = CAL.load_profile(tmp_path, backend="pallas",
+                            device_kind="Fake TPU v9")
+    assert back is not None
+    assert dict(back.item_coef) == pytest.approx(dict(prof.item_coef))
+    assert back.launch_coef == pytest.approx(prof.launch_coef)
+    assert back.source == "measured"
+    assert back.n_samples == prof.n_samples
+    assert back.digest() == prof.digest()
+
+
+def test_missing_profile_is_silent_default(tmp_path):
+    assert CAL.load_profile(tmp_path, backend="pallas",
+                            device_kind="none") is None
+    prof = CAL.load_or_default(tmp_path, backend="pallas",
+                               device_kind="none")
+    assert prof is CAL.DEFAULT_PROFILE
+
+
+@pytest.mark.parametrize("payload", [
+    "not json at all {",
+    json.dumps({"schema": 99, "item_coef": {"block": 1.0},
+                "launch_coef": 1.0}),
+    json.dumps({"schema": CAL.PROFILE_SCHEMA, "item_coef": {},
+                "launch_coef": 1.0}),
+    json.dumps({"schema": CAL.PROFILE_SCHEMA,
+                "item_coef": {"block": -5.0}, "launch_coef": 1.0}),
+])
+def test_stale_or_corrupt_profile_warns_and_falls_back(tmp_path, payload):
+    path = CAL.profile_path(tmp_path, "pallas", "dev")
+    path.parent.mkdir(parents=True)
+    path.write_text(payload)
+    with pytest.warns(RuntimeWarning, match="stale/corrupt"):
+        got = CAL.load_profile(tmp_path, backend="pallas",
+                               device_kind="dev")
+    assert got is None
+    with pytest.warns(RuntimeWarning):
+        prof = CAL.load_or_default(tmp_path, backend="pallas",
+                                   device_kind="dev")
+    assert prof is CAL.DEFAULT_PROFILE
+
+
+# ---------------------------------------------------------------------------
+# Rank agreement helper
+# ---------------------------------------------------------------------------
+
+def test_spearman():
+    assert T.spearman([1, 2, 3], [10, 20, 30]) == pytest.approx(1.0)
+    assert T.spearman([1, 2, 3], [30, 20, 10]) == pytest.approx(-1.0)
+    assert T.spearman([1.0], [2.0]) == 1.0
+    assert T.spearman([1, 1, 1], [1, 2, 3]) == 0.0
+    assert T.spearman([1, 1, 1], [2, 2, 2]) == 1.0
+    # monotone but nonlinear is still rank-perfect
+    assert T.spearman([1, 2, 3, 4], [1, 10, 100, 1000]) == pytest.approx(
+        1.0)
+    with pytest.raises(ValueError):
+        T.spearman([1, 2], [1, 2, 3])
+
+
+# ---------------------------------------------------------------------------
+# The committed bench artifact (the acceptance evidence)
+# ---------------------------------------------------------------------------
+
+def test_bench_pipeline_artifact_committed():
+    """``BENCH_pipeline.json`` at the repo root holds wall-clock
+    fused-vs-unfused speedups for all five programs and a calibration
+    row whose predicted-vs-measured region ranking agrees (Spearman
+    >= 0.6).  Regenerate with::
+
+        PYTHONPATH=src:. python benchmarks/run.py --only pipeline \\
+            --json BENCH_pipeline.json
+    """
+    path = REPO_ROOT / "BENCH_pipeline.json"
+    assert path.is_file(), "BENCH_pipeline.json missing from repo root"
+    data = json.loads(path.read_text())
+    rows = {r["name"]: dict(p.split("=", 1)
+                            for p in r["derived"].split(";") if "=" in p)
+            for r in data["rows"]}
+    programs = {f"pipeline_{n}" for n in
+                ("attention", "causal_attention", "gqa_attention",
+                 "layernorm_matmul", "rmsnorm_ffn_swiglu")}
+    assert programs <= set(rows)
+    for name in programs:
+        assert float(rows[name]["speedup"].rstrip("x")) > 0
+        assert rows[name]["pallas_fallbacks"] == "0"
+        assert "region_times_us" in rows[name]
+    cal = rows["calibration_profile"]
+    assert float(cal["pooled_spearman"]) >= 0.6
+    assert int(cal["n_samples"]) >= 5
