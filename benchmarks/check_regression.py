@@ -11,6 +11,9 @@ run against the committed baseline and exits non-zero if
   * any **Pallas region falls back** off the Pallas backend in ANY row,
     baseline-listed or new (``pallas_fallbacks != 0`` — the selected
     snapshot must lower),
+  * any pinned row's **kernel launch count** grows (``launches`` — the
+    grouped megakernel schedule split apart, paying launches and HBM
+    round-trips the baseline avoided),
   * the **wall-clock fused-vs-unfused speedup** — the geometric mean of
     the per-row ratios — collapses by more than ``WALL_TOLERANCE``
     (1.5x) below the baseline's.  Generous on purpose: absolute wall
@@ -42,7 +45,7 @@ import sys
 TOLERANCE = 0.10  # fail when reduction drops >10% below baseline
 WALL_TOLERANCE = 1.5  # fail when speedup collapses >1.5x below baseline
 GATED_KEYS = ("pred_traffic_reduction", "pallas_regions",
-              "pallas_fallbacks", "speedup")
+              "pallas_fallbacks", "launches", "resident_edges", "speedup")
 
 
 def _parse_derived(derived: str) -> dict:
@@ -112,18 +115,30 @@ def main(argv) -> int:
         elif cur_red > base_red * (1.0 + TOLERANCE):
             verdict = "improved (re-pin baseline?)"
             improved.append(name)
-        # region count is pinned too: MORE kernels for the same program
-        # is a lowering regression (launches + cross-region traffic);
-        # fewer is an improvement worth re-pinning
+        # region count is pinned too: MORE regions for the same program
+        # is a partitioning regression; fewer is an improvement worth
+        # re-pinning
         base_rg, cur_rg = base.get("pallas_regions"), cur.get(
             "pallas_regions")
         if base_rg is not None and cur_rg is not None:
             if int(cur_rg) > int(base_rg):
                 verdict = "MORE REGIONS"
                 failures.append(
-                    f"{name}: selected snapshot now lowers to {cur_rg} "
-                    f"Pallas kernels (baseline {base_rg})")
+                    f"{name}: selected snapshot now partitions into "
+                    f"{cur_rg} regions (baseline {base_rg})")
             elif int(cur_rg) < int(base_rg) and verdict == "ok":
+                verdict = "improved (re-pin baseline?)"
+                improved.append(name)
+        # launch count: the grouped megakernel schedule must not split
+        # apart (every extra launch pays a cross-kernel HBM round-trip)
+        base_l, cur_l = base.get("launches"), cur.get("launches")
+        if base_l is not None and cur_l is not None:
+            if int(cur_l) > int(base_l):
+                verdict = "MORE LAUNCHES"
+                failures.append(
+                    f"{name}: grouped lowering now launches {cur_l} "
+                    f"kernels (baseline {base_l})")
+            elif int(cur_l) < int(base_l) and verdict == "ok":
                 verdict = "improved (re-pin baseline?)"
                 improved.append(name)
         print(f"{name:32s} {base_red:7.2f}x {cur_red:7.2f}x  {verdict}")

@@ -102,17 +102,20 @@ def bench_example(name: str) -> List[Dict]:
 
 def bench_pipeline_example(name: str, repeats: int = 5, bs: int = 16,
                            examples: Dict = None,
-                           samples: Optional[List[Dict]] = None
+                           samples: Optional[List[Dict]] = None,
+                           lowering_reports: Optional[Dict] = None
                            ) -> List[Dict]:
     """Fused vs unfused wall time through ``pipeline.compile`` (jax
     backend), with the cost model's predicted traffic side by side, plus
-    the Pallas lowering report of the selected snapshot (regions emitted
-    and fallbacks taken — the CI gate pins fallbacks to zero) and the
-    per-region wall times that feed calibration: each region kernel is
-    timed standalone and paired with its ``region_costs`` entry
-    (``region_spearman`` is their rank agreement); the raw
-    (traffic features, seconds) pairs are appended to ``samples`` for
-    the profile fit."""
+    the Pallas lowering of the selected snapshot: the grouped megakernel
+    schedule (``launches``/``resident_edges``/``grouped_cost`` — the CI
+    gate pins launches and fallbacks) next to the per-region breakdown.
+    Both the grouped kernels and the ungrouped per-region kernels are
+    timed standalone and paired with their cost attributions *by kernel
+    id* (``group_spearman``/``region_spearman`` are the rank
+    agreements); every raw (traffic features, seconds) pair is appended
+    to ``samples`` for the profile fit, and the lowering report is
+    recorded in ``lowering_reports`` (the CI artifact)."""
     from repro import pipeline
     from repro.core import calibrate as CAL
     from repro.core import timing as T
@@ -137,31 +140,57 @@ def bench_pipeline_example(name: str, repeats: int = 5, bs: int = 16,
     # the second compile must be an in-process cache hit
     rehit = pipeline.compile(g, dims, backend="jax", blocks=blocks,
                              cache=cache).cache_hit
-    # Pallas lowering of the SAME selected snapshot (emission only):
-    # region DAG size and fallback count, gated to zero in CI
+    # Pallas lowering of the SAME selected snapshot: the grouped
+    # megakernel schedule (what actually runs) and, for calibration
+    # sample diversity, the ungrouped per-region schedule
     kp = pipeline.compile(g, dims, backend="pallas", blocks=blocks,
                           interpret=True, cache=cache)
+    kpr = pipeline.compile(g, dims, backend="pallas", blocks=blocks,
+                           interpret=True, cache=cache, group=False)
     rep = kp.lowering_report
-    # per-region wall times, paired with the per-region traffic
-    # attribution of the same plan (same order)
-    region_sp = ""
-    region_us = ""
-    # region kernels run in interpret mode off-TPU (hundreds of ms):
-    # a handful of repeats is enough and keeps the bench under a minute
-    rts = T.region_times(kp, inputs, warmup=1,
-                         repeats=min(5, max(2, repeats // 2)))
-    feats = CAL.region_features(kp.graph, dims)
-    if (rts and kp.region_costs
-            and len(rts) == len(kp.region_costs)):
-        meas = [r.median_s for r in rts]
-        sp = T.spearman(kp.region_costs, meas)
-        region_sp = f"region_spearman={sp:.2f};"
-        region_us = ("region_times_us="
-                     + "/".join(f"{m * 1e6:.0f}" for m in meas) + ";")
-        if samples is not None and feats and len(feats) == len(rts):
-            for f, r, c in zip(feats, rts, kp.region_costs):
-                samples.append({"program": name, "features": f,
-                                "seconds": r.median_s, "pred_cost": c})
+    if lowering_reports is not None:
+        lowering_reports[name] = {
+            "launches": rep.launches,
+            "resident_edges": rep.resident_edges,
+            "regions": rep.n_regions,
+            "fallbacks": rep.fallbacks,
+            "kernel_ids": list(kp.kernel_ids or ()),
+            "summary": rep.summary(),
+        }
+    extra = ""
+    # kernels run in interpret mode off-TPU (hundreds of ms): a handful
+    # of repeats is enough and keeps the bench under a minute
+    t_reps = min(5, max(2, repeats // 2))
+    gts = T.region_times(kp, inputs, warmup=1, repeats=t_reps)
+    gpaired = T.pair_region_times(kp, gts or [])
+    if gpaired:
+        sp = T.spearman([c for _, c, _ in gpaired],
+                        [s for _, _, s in gpaired])
+        extra += (f"group_spearman={sp:.2f};kernel_times_us="
+                  + "/".join(f"{s * 1e6:.0f}" for _, _, s in gpaired)
+                  + ";")
+        gfeats = dict(CAL.group_features(kp.graph, dims, blocks) or ())
+        if samples is not None:
+            for gid, c, s in gpaired:
+                if gid in gfeats:
+                    samples.append({"program": name, "kernel": gid,
+                                    "features": gfeats[gid],
+                                    "seconds": s, "pred_cost": c})
+    rts = T.region_times(kpr, inputs, warmup=1, repeats=t_reps)
+    rpaired = T.pair_region_times(kpr, rts or [])
+    feats = CAL.region_features(kpr.graph, dims)
+    if rpaired:
+        sp = T.spearman([c for _, c, _ in rpaired],
+                        [s for _, _, s in rpaired])
+        extra += (f"region_spearman={sp:.2f};region_times_us="
+                  + "/".join(f"{s * 1e6:.0f}" for _, _, s in rpaired)
+                  + ";")
+        if (samples is not None and feats
+                and len(feats) == len(rpaired)):
+            for f, (gid, c, s) in zip(feats, rpaired):
+                samples.append({"program": name, "kernel": gid,
+                                "features": f, "seconds": s,
+                                "pred_cost": c})
     return [{
         "name": f"pipeline_{name}",
         "us_per_call": fused_us,
@@ -174,7 +203,11 @@ def bench_pipeline_example(name: str, repeats: int = 5, bs: int = 16,
             f"snapshot={kf.snapshot_index};recompile_hit={rehit};"
             f"pallas_regions={rep.n_regions};"
             f"pallas_fallbacks={rep.fallbacks};"
-            + region_sp + region_us.rstrip(";")
+            f"launches={rep.launches};"
+            f"resident_edges={rep.resident_edges};"
+            + (f"grouped_cost={kp.grouped_cost:.3g};"
+               if kp.grouped_cost is not None else "")
+            + extra
         ).rstrip(";"),
     }]
 
@@ -217,16 +250,25 @@ def _calibration_row(samples: List[Dict],
 
 
 def run_pipeline(preset: str = "full",
-                 profile_out: Optional[str] = None) -> List[Dict]:
+                 profile_out: Optional[str] = None,
+                 lowering_out: Optional[str] = None) -> List[Dict]:
     examples, repeats, bs = PRESETS[preset]
     rows: List[Dict] = []
     samples: List[Dict] = []
+    reports: Dict[str, Dict] = {}
     for name in examples:
         rows.extend(bench_pipeline_example(name, repeats=repeats, bs=bs,
                                            examples=examples,
-                                           samples=samples))
+                                           samples=samples,
+                                           lowering_reports=reports))
     if samples:
         rows.append(_calibration_row(samples, profile_out))
+    if lowering_out:
+        import json
+        with open(lowering_out, "w") as f:
+            json.dump({"preset": preset, "programs": reports}, f,
+                      indent=2)
+            f.write("\n")
     return rows
 
 

@@ -39,13 +39,18 @@ def main() -> None:
                     help="also write the fitted calibration profile "
                          "(pipeline section) to PATH; it is always "
                          "saved to the kernel cache dir")
+    ap.add_argument("--lowering-out", default=None, metavar="PATH",
+                    help="write the per-program Pallas lowering reports "
+                         "(launches, resident edges, kernel ids) as "
+                         "JSON — CI uploads it as an artifact")
     args = ap.parse_args()
 
     sections = {
         "fusion": fusion_bench.run,
         "pipeline": functools.partial(fusion_bench.run_pipeline,
                                       preset=args.preset,
-                                      profile_out=args.profile_out),
+                                      profile_out=args.profile_out,
+                                      lowering_out=args.lowering_out),
         "kernel": kernel_bench.run,
         "roofline": roofline.run,
     }

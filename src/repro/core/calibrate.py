@@ -143,25 +143,49 @@ def resolve_profile(item_bytes: Optional[Mapping[str, float]] = None,
 def traffic_features(g: Graph, dims: Dict[str, int]) -> Dict[str, float]:
     """Items moved per kind plus the launch count — exactly the terms of
     ``CalibrationProfile.cost``, so ``cost == coef . features``."""
-    t = C.traffic(g, dims)
-    f = {k: float(t.loads.get(k, 0) + t.stores.get(k, 0))
-         for k in set(ITEM_KINDS) | set(t.loads) | set(t.stores)}
-    f["launches"] = float(t.launches)
-    return f
+    return _traffic_to_features(C.traffic(g, dims))
 
 
 def region_features(g: Graph, dims: Dict[str, int]
                     ) -> Optional[List[Dict[str, float]]]:
-    """Per-region feature rows of a snapshot, aligned with
-    ``selection.region_costs`` / the Pallas lowering order (the
-    partition is deterministic).  ``None`` when the program cannot be
-    partitioned."""
+    """Per-region feature rows of a snapshot, aligned with the
+    *ungrouped* ``selection.region_costs`` / per-region lowering order
+    (the partition is deterministic).  ``None`` when the program cannot
+    be partitioned."""
     from repro.core import regions as R
     try:
         plan = R.plan_program(g)
     except R.RegionError:
         return None
     return [traffic_features(spec.graph, dims) for spec in plan.regions]
+
+
+def _traffic_to_features(t: C.Traffic) -> Dict[str, float]:
+    f = {k: float(t.loads.get(k, 0) + t.stores.get(k, 0))
+         for k in set(ITEM_KINDS) | set(t.loads) | set(t.stores)}
+    f["launches"] = float(t.launches)
+    return f
+
+
+def group_features(g: Graph, dims: Dict[str, int],
+                   blocks: Optional[Dict[str, int]] = None, *,
+                   budget_bytes: Optional[int] = None
+                   ) -> Optional[List[Tuple[str, Dict[str, float]]]]:
+    """Per-*kernel* feature rows of a snapshot under the region-group
+    lowering: one ``(kernel id, features)`` pair per megakernel, with
+    VMEM-resident edges uncharged and a single launch per group —
+    exactly the terms of ``selection.group_cost``, re-derived from the
+    same deterministic grouping the Pallas backend emits, so rows pair
+    with measured kernel times *by id*.  ``None`` when the program
+    cannot be partitioned."""
+    from repro.core import regions as R
+    try:
+        gp = R.group_plan(R.plan_program(g), dims, blocks,
+                          budget_bytes=budget_bytes)
+    except R.RegionError:
+        return None
+    return [(grp.gid, _traffic_to_features(C.group_traffic(grp, dims)))
+            for grp in gp.groups]
 
 
 # ---------------------------------------------------------------------------

@@ -4,9 +4,15 @@ The lowering is region-based (``core/regions.py``): the snapshot is
 partitioned into a DAG of spine regions — each a nest of parallel maps
 (-> pallas grid dimensions) around at most one accumulating node (a
 serial map or a reduce -> the trailing sequential grid dimension with
-f32 VMEM scratch carries) — and ``emit_program`` emits one
-``pallas_call`` per region, multi-output, threading every value that
-crosses a region boundary as a merged global array between kernels.
+f32 VMEM scratch carries) — the regions are packed into megakernel
+*groups* (``regions.group_plan``: compatible parallel spines merge
+under a VMEM budget), and ``emit_program`` emits one multi-stage
+``pallas_call`` per group.  Stages run in sequence inside the kernel
+body with their off-grid dims evaluated over whole-VMEM-resident data;
+cross-region values whose producer and consumers share a group are
+kernel-local VMEM carries, and only values that cross a *group*
+boundary spill to merged global arrays between kernels (with dying
+intermediates donated via ``input_output_aliases``).
 The fully fused snapshots still lower to exactly one mega-kernel (the
 paper's Example 1 epilogue == ``kernels/flash_attention.py`` modulo the
 online-softmax rescale); partially fused snapshots and multi-output
@@ -26,7 +32,8 @@ whole-resident in VMEM and in-kernel loops slice them.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import warnings
+from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -53,14 +60,32 @@ class RegionReport:
     red_dim: Optional[str]
     n_outputs: int
     fallback: Optional[str] = None  # reason, when not lowered to Pallas
+    group: str = ""                 # id of the kernel serving this region
+
+
+@dataclass(frozen=True)
+class KernelRun:
+    """One emitted ``pallas_call``: the unit the executor launches.  The
+    timing harness pairs each kernel's wall time with the per-kernel
+    cost attribution by ``gid``, never by position."""
+
+    gid: str
+    label: str
+    in_refs: Tuple[Ref, ...]
+    out_refs: Tuple[Ref, ...]
 
 
 @dataclass
 class LoweringReport:
-    """Provenance of one ``emit_program`` call: every region emitted and
-    every fallback taken (which must be zero for in-repo programs)."""
+    """Provenance of one ``emit_program`` call: every region emitted,
+    every fallback taken (which must be zero for in-repo programs), how
+    many kernels actually launch (grouped regions share one), and how
+    many cross-region values stayed VMEM-resident instead of
+    round-tripping through global memory."""
 
     regions: List[RegionReport] = field(default_factory=list)
+    launches: int = 0
+    resident_edges: int = 0
 
     @property
     def n_regions(self) -> int:
@@ -76,8 +101,11 @@ class LoweringReport:
             grid = ",".join(r.grid_dims)
             tail = f"+{r.red_dim}*" if r.red_dim else ""
             note = f" FALLBACK({r.fallback})" if r.fallback else ""
-            parts.append(f"{r.label}[{grid}{tail}]{note}")
-        return f"{self.n_regions} regions: " + "; ".join(parts)
+            tag = f"@{r.group}" if r.group else ""
+            parts.append(f"{r.label}[{grid}{tail}]{tag}{note}")
+        return (f"{self.n_regions} regions in {self.launches} kernels "
+                f"({self.resident_edges} resident edges): "
+                + "; ".join(parts))
 
 
 def plan(g: Graph) -> ProgramPlan:
@@ -141,7 +169,7 @@ def _split_whole(arr, vt_dims, dims, grid_axes, axis=0):
         idx = [slice(None)] * arr.ndim
         idx[axis] = slice(i * size, (i + 1) * size)
         parts.append(_split_whole(arr[tuple(idx)], vt_dims[1:], dims,
-                                  grid_axes, axis))
+                                  grid_axes, axis + 1))
     return parts
 
 
@@ -197,9 +225,13 @@ def _first_item(v):
 # In-kernel evaluation
 # ---------------------------------------------------------------------------
 
-def _eval_inner(g: Graph, env: Dict, dims: Dict[str, int]) -> List[Any]:
+def _eval_inner(g: Graph, env: Dict, dims: Dict[str, int],
+                grid_axes: frozenset = frozenset()) -> List[Any]:
     """In-kernel evaluation; list values are python lists of VMEM slices,
-    serial maps unroll statically."""
+    serial maps unroll statically.  A map over a dim in ``grid_axes``
+    (the grouped-kernel path: the pallas grid already selected that
+    block) runs a single iteration with mapped values passed through
+    unsplit and outputs left unwrapped."""
     out: Dict[int, Any] = {}
     for nid in g.topo():
         node = g.nodes[nid]
@@ -215,6 +247,16 @@ def _eval_inner(g: Graph, env: Dict, dims: Dict[str, int]) -> List[Any]:
             for item in ins[0][1:]:
                 acc = acc + item
             env[(nid, 0)] = acc
+        elif isinstance(node, MapNode) and node.dim in grid_axes:
+            if node.serial:
+                raise RegionError(
+                    f"serial map[{node.dim}] over a grid-selected dim")
+            ienv: Dict = {}
+            for p, e in enumerate(g.in_edges(nid)):
+                ienv[(node.inner.input_ids[p], 0)] = env[(e.src, e.sp)]
+            res = _eval_inner(node.inner, ienv, dims, grid_axes)
+            for pp in range(node.n_out()):
+                env[(nid, pp)] = res[pp]
         elif isinstance(node, MapNode):
             n = dims[node.dim]
             accs: List[Any] = [None] * node.n_out()
@@ -226,7 +268,7 @@ def _eval_inner(g: Graph, env: Dict, dims: Dict[str, int]) -> List[Any]:
                     if node.mapped[p]:
                         v = v[i]
                     ienv[(node.inner.input_ids[p], 0)] = v
-                res = _eval_inner(node.inner, ienv, dims)
+                res = _eval_inner(node.inner, ienv, dims, grid_axes)
                 for pp, r in enumerate(node.reduced):
                     if r is None:
                         lists[pp].append(res[pp])
@@ -329,12 +371,46 @@ def _classify_outputs(spec: RegionSpec, levels, base_g, acc_id,
     return slots
 
 
+def _alias_map(merged_inputs, out_shapes, dtype, donate,
+               in_layouts=None, out_layouts=None):
+    """``input_output_aliases`` for one ``pallas_call``: donate each
+    dying merged intermediate (``donate[i]`` True — its last consumer is
+    this kernel and it is not a program value) to the first unclaimed
+    output of identical shape, dtype, AND block layout
+    (``(vt.dims, item_shape)`` — which fixes the BlockSpec/index map).
+    The layout match matters for correctness: grid steps run in
+    sequence, so an aliased pair with identical index maps means step
+    *i* overwrites exactly the block it just read, while mismatched
+    index maps could clobber blocks a later step still reads.  XLA
+    copies when an aliased input is still live (e.g. the timing harness
+    re-calling a kernel), so donation never corrupts caller data."""
+    if not donate:
+        return {}
+    aliases: Dict[int, int] = {}
+    used: set = set()
+    for i, ok in enumerate(donate):
+        if not ok or merged_inputs[i].dtype != dtype:
+            continue
+        for j, s in enumerate(out_shapes):
+            if (j not in used
+                    and tuple(merged_inputs[i].shape) == tuple(s)
+                    and (in_layouts is None or out_layouts is None
+                         or in_layouts[i] == out_layouts[j])):
+                aliases[i] = j
+                used.add(j)
+                break
+    return aliases
+
+
 def emit_region(spec: RegionSpec, dims: Dict[str, int],
-                in_item_shapes: List[Tuple[int, ...]], interpret: bool):
+                in_item_shapes: List[Tuple[int, ...]], interpret: bool,
+                donate: Optional[Sequence[bool]] = None):
     """Lower one region to a single multi-output ``pallas_call``.
 
     Returns ``(fn, out_item_shapes, report)`` where ``fn`` maps merged
-    input arrays to a tuple of merged output arrays."""
+    input arrays to a tuple of merged output arrays.  ``donate[i]``
+    marks input *i* as a dying intermediate whose buffer may be aliased
+    to a same-shape output."""
     rg = spec.graph
     levels, base_g, acc_id = _region_levels(spec)
     red_dim = spec.red_dim
@@ -485,6 +561,11 @@ def emit_region(spec: RegionSpec, dims: Dict[str, int],
 
     grid = tuple(dims[d] for d in grid_axes)
 
+    in_layouts = [(vt.dims, tuple(ish))
+                  for vt, ish in zip(in_types, in_item_shapes)]
+    out_layouts = [(s.vt.dims, tuple(ish))
+                   for s, ish in zip(slots, out_item_shapes)]
+
     def region_fn(*merged_inputs):
         dtype = (jnp.result_type(*merged_inputs) if merged_inputs
                  else jnp.float32)
@@ -495,12 +576,112 @@ def emit_region(spec: RegionSpec, dims: Dict[str, int],
             out_specs=out_specs,
             out_shape=[jax.ShapeDtypeStruct(s, dtype) for s in out_full],
             scratch_shapes=scratch,
+            input_output_aliases=_alias_map(merged_inputs, out_full,
+                                            dtype, donate, in_layouts,
+                                            out_layouts),
             interpret=interpret,
         )(*merged_inputs)
         return tuple(outs)
 
     report = RegionReport(spec.label, tuple(grid_dims), red_dim, n_out)
     return region_fn, out_item_shapes, report
+
+
+def emit_group(group, types: Dict[Ref, VType], dims: Dict[str, int],
+               in_item_shapes: List[Tuple[int, ...]], interpret: bool,
+               donate: Optional[Sequence[bool]] = None):
+    """Lower one region *group* to a single multi-stage ``pallas_call``.
+
+    The kernel grid is the group's shared parallel spine; every member
+    region runs in sequence inside the kernel body with its off-grid
+    dims evaluated over whole-VMEM-resident data (serial spines unroll
+    in-kernel), and every in-group cross-region value is carried as a
+    kernel-local VMEM value — it never touches global memory.  Only the
+    group's spilled ``out_refs`` are written out.
+
+    Returns ``(fn, out_item_shapes, reports)`` with one
+    :class:`RegionReport` per member."""
+    grid_axes = list(group.grid_dims)
+    gset = frozenset(grid_axes)
+    for d in grid_axes:
+        if d not in dims:
+            raise RegionError(f"grid dim {d} missing from dims")
+    in_types = [types[r] for r in group.in_refs]
+    out_types = [types[r] for r in group.out_refs]
+
+    def run_stages(values: Dict[Ref, Any]) -> Dict[Ref, Any]:
+        env = dict(values)
+        for spec in group.members:
+            ienv = {}
+            for iid, r in zip(spec.graph.input_ids, spec.in_refs):
+                ienv[(iid, 0)] = env[r]
+            res = _eval_inner(spec.graph, ienv, dims, gset)
+            for r, v in zip(spec.out_refs, res):
+                env[r] = v
+        return env
+
+    abstract_ins = [
+        jax.ShapeDtypeStruct(_block_shape(vt, ish, dims, grid_axes),
+                             jnp.float32)
+        for vt, ish in zip(in_types, in_item_shapes)]
+
+    def abs_values(arrs):
+        return {r: _split_value(a, vt, ish, dims, grid_axes)
+                for r, a, vt, ish in zip(group.in_refs, arrs, in_types,
+                                         in_item_shapes)}
+
+    def out_items(*arrs):
+        env = run_stages(abs_values(arrs))
+        return tuple(_first_item(env[r]) for r in group.out_refs)
+
+    out_item_abs = jax.eval_shape(out_items, *abstract_ins)
+    out_item_shapes = [tuple(a.shape) for a in out_item_abs]
+    out_full = [merged_shape(vt, ish, dims)
+                for vt, ish in zip(out_types, out_item_shapes)]
+    out_specs = [_block_spec(vt, ish, dims, grid_axes)
+                 for vt, ish in zip(out_types, out_item_shapes)]
+    in_specs = [_block_spec(vt, ish, dims, grid_axes)
+                for vt, ish in zip(in_types, in_item_shapes)]
+    n_in, n_out = len(group.in_refs), len(group.out_refs)
+
+    def kernel(*refs):
+        in_refs_, out_refs_ = refs[:n_in], refs[n_in:n_in + n_out]
+        values = {r: _split_value(ref[...], vt, ish, dims, grid_axes)
+                  for r, ref, vt, ish in zip(group.in_refs, in_refs_,
+                                             in_types, in_item_shapes)}
+        env = run_stages(values)
+        for o_ref, r, vt, ish in zip(out_refs_, group.out_refs,
+                                     out_types, out_item_shapes):
+            merged = _merge_value(env[r], vt, len(ish), dims, grid_axes)
+            o_ref[...] = merged.reshape(o_ref.shape).astype(o_ref.dtype)
+
+    grid = tuple(dims[d] for d in grid_axes)
+
+    in_layouts = [(vt.dims, tuple(ish))
+                  for vt, ish in zip(in_types, in_item_shapes)]
+    out_layouts = [(vt.dims, tuple(ish))
+                   for vt, ish in zip(out_types, out_item_shapes)]
+
+    def group_fn(*merged_inputs):
+        dtype = (jnp.result_type(*merged_inputs) if merged_inputs
+                 else jnp.float32)
+        outs = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            out_shape=[jax.ShapeDtypeStruct(s, dtype) for s in out_full],
+            input_output_aliases=_alias_map(merged_inputs, out_full,
+                                            dtype, donate, in_layouts,
+                                            out_layouts),
+            interpret=interpret,
+        )(*merged_inputs)
+        return tuple(outs)
+
+    reports = [RegionReport(spec.label, spec.grid_dims, spec.red_dim,
+                            len(spec.out_refs), group=group.gid)
+               for spec in group.members]
+    return group_fn, out_item_shapes, reports
 
 
 def _fallback_region(spec: RegionSpec, dims: Dict[str, int],
@@ -539,18 +720,24 @@ def _fallback_region(spec: RegionSpec, dims: Dict[str, int],
 
 def emit_program(g: Graph, dims: Dict[str, int], blocks: Dict[str, int],
                  interpret="auto",
-                 program_plan: Optional[ProgramPlan] = None
+                 program_plan: Optional[ProgramPlan] = None,
+                 grouped_plan=None, group: bool = True
                  ) -> Tuple[Callable[..., Tuple], LoweringReport]:
     """Lower every region of (the partition of) ``g``.
 
-    Returns ``(fn, report)``: ``fn`` takes one merged array per program
-    input and returns a tuple of merged arrays, one per program output;
-    ``report`` records the regions emitted and any fallbacks taken (a
-    region the Pallas emitter cannot express runs on the jax backend —
-    zero for all in-repo programs, and pinned to zero by
-    ``tests/test_lowering_coverage.py``).  Callers that already
-    partitioned ``g`` (the driver shares one plan between lowering and
-    per-region cost attribution) pass it via ``program_plan``."""
+    Regions are first packed into megakernel groups
+    (``regions.group_plan``, unless ``group=False``): one multi-stage
+    ``pallas_call`` per group, with in-group cross-region values carried
+    in VMEM.  Returns ``(fn, report)``: ``fn`` takes one merged array
+    per program input and returns a tuple of merged arrays, one per
+    program output; ``report`` records the regions emitted, the kernels
+    launched (``report.launches``), the VMEM-resident edges, and any
+    fallbacks taken (a region the Pallas emitter cannot express runs on
+    the jax backend — zero for all in-repo programs, and pinned to zero
+    by ``tests/test_lowering_coverage.py``).  Callers that already
+    partitioned/grouped ``g`` (the driver shares one plan between
+    lowering and per-kernel cost attribution) pass it via
+    ``program_plan``/``grouped_plan``."""
     interpret = resolve_interpret(interpret)
     try:
         pp = program_plan if program_plan is not None else plan(g)
@@ -564,12 +751,21 @@ def emit_program(g: Graph, dims: Dict[str, int], blocks: Dict[str, int],
             tuple(blocks[d] for d in vt.dims[vt.lead_dims:])
             for vt in (g.nodes[i].vtype for i in g.input_ids)]
         fn, _, rep = _fallback_region(whole, dims, in_items, str(err))
-        fn.region_runners = [(whole, fn)]
+        fn.region_runners = [(KernelRun("g0:program", "program",
+                                        tuple(whole.in_refs),
+                                        tuple(whole.out_refs)), fn)]
         fn.input_refs = [(i, 0) for i in g.input_ids]
-        return fn, LoweringReport([rep])
+        fn.emitted_kernels = [("g0:program", whole)]
+        return fn, LoweringReport([rep], launches=1)
+    gp = grouped_plan
+    if gp is None:
+        gp = (R.group_plan(pp, dims, blocks) if group
+              else R.ungrouped_plan(pp))
+    types = pp.graph.infer_types()
     report = LoweringReport()
 
     item_shapes: Dict[Ref, Tuple[int, ...]] = {}
+    prog_in = set()
     for iid in pp.graph.input_ids:
         vt = pp.graph.nodes[iid].vtype
         for d in vt.dims[:vt.lead_dims]:
@@ -579,20 +775,72 @@ def emit_program(g: Graph, dims: Dict[str, int], blocks: Dict[str, int],
                     f"{blocks[d]}")
         item_shapes[(iid, 0)] = tuple(blocks[d]
                                       for d in vt.dims[vt.lead_dims:])
+        prog_in.add((iid, 0))
+    prog_out = {(e.src, e.sp) for oid in pp.graph.output_ids
+                for e in [pp.graph.in_edge(oid, 0)]}
 
-    lowered: List[Tuple[RegionSpec, Callable]] = []
-    for spec in pp.regions:
+    # a merged intermediate dies at its last consuming kernel: that
+    # kernel may donate its buffer to a same-shape output
+    last_use: Dict[Ref, int] = {}
+    for gi, grp in enumerate(gp.groups):
+        for r in grp.in_refs:
+            last_use[r] = gi
+
+    def donatable(refs: Sequence[Ref], gi: int) -> List[bool]:
+        return [r not in prog_in and r not in prog_out
+                and last_use.get(r) == gi for r in refs]
+
+    lowered: List[Tuple[KernelRun, Callable]] = []
+    # what each emitted kernel actually serves (a RegionGroup, or a
+    # RegionSpec for singleton/degraded kernels) — the driver recomputes
+    # per-kernel cost provenance from this when emission diverged from
+    # the planned grouping
+    emitted: List[Tuple[str, Any]] = []
+
+    def lower_one(spec: RegionSpec, gid: str, gi: int) -> None:
         in_items = [item_shapes[r] for r in spec.in_refs]
         try:
-            fn, out_items, rep = emit_region(spec, dims, in_items,
-                                             interpret)
+            fn, out_items, rep = emit_region(
+                spec, dims, in_items, interpret,
+                donate=donatable(spec.in_refs, gi))
         except (RegionError, NotImplementedError) as err:
             fn, out_items, rep = _fallback_region(spec, dims, in_items,
                                                   str(err))
+        rep = replace(rep, group=gid)
         for ref, ish in zip(spec.out_refs, out_items):
             item_shapes[ref] = ish
-        lowered.append((spec, fn))
+        lowered.append((KernelRun(gid, rep.label, tuple(spec.in_refs),
+                                  tuple(spec.out_refs)), fn))
+        emitted.append((gid, spec))
         report.regions.append(rep)
+
+    for gi, grp in enumerate(gp.groups):
+        if len(grp.members) == 1:
+            lower_one(grp.members[0], grp.gid, gi)
+            continue
+        try:
+            in_items = [item_shapes[r] for r in grp.in_refs]
+            fn, out_items, reps = emit_group(
+                grp, types, dims, in_items, interpret,
+                donate=donatable(grp.in_refs, gi))
+        except (RegionError, NotImplementedError) as err:
+            # a group the emitter cannot express degrades to per-region
+            # kernels (still Pallas when possible), never to one big
+            # jax fallback
+            warnings.warn(
+                f"grouped lowering of {grp.gid} fell back to per-region "
+                f"kernels ({err})", RuntimeWarning, stacklevel=2)
+            for spec in grp.members:
+                lower_one(spec, f"{grp.gid}.{spec.node}", gi)
+            continue
+        for ref, ish in zip(grp.out_refs, out_items):
+            item_shapes[ref] = ish
+        lowered.append((KernelRun(grp.gid, grp.label, tuple(grp.in_refs),
+                                  tuple(grp.out_refs)), fn))
+        emitted.append((grp.gid, grp))
+        report.regions.extend(reps)
+        report.resident_edges += len(grp.resident)
+    report.launches = len(lowered)
 
     out_refs: List[Ref] = []
     for oid in pp.graph.output_ids:
@@ -603,17 +851,18 @@ def emit_program(g: Graph, dims: Dict[str, int], blocks: Dict[str, int],
         env: Dict[Ref, Any] = {
             (iid, 0): a
             for iid, a in zip(pp.graph.input_ids, merged_inputs)}
-        for spec, fn in lowered:
-            outs = fn(*[env[r] for r in spec.in_refs])
-            for ref, o in zip(spec.out_refs, outs):
+        for kr, fn in lowered:
+            outs = fn(*[env[r] for r in kr.in_refs])
+            for ref, o in zip(kr.out_refs, outs):
                 env[ref] = o
         return tuple(env[r] for r in out_refs)
 
-    # per-region callables for the timing harness: core/timing.py
+    # per-kernel callables for the timing harness: core/timing.py
     # re-threads the same env and times each kernel standalone, pairing
-    # wall times with selection.region_costs entries (same plan order)
+    # wall times with the per-kernel cost attribution by KernelRun.gid
     run.region_runners = lowered
     run.input_refs = [(iid, 0) for iid in pp.graph.input_ids]
+    run.emitted_kernels = emitted
     return run, report
 
 

@@ -24,6 +24,15 @@ the average ``sum_m ceil((m+1)*N/M) / M`` (``(N+1)/2`` when the two dims
 tile the sequence identically).  This is exactly the traffic win causal
 fusion buys, and it is what makes the cost model prefer the causal
 program's snapshots for decoder workloads.
+
+VMEM residency (the region-group megakernel lowering): when several
+regions share one kernel, their cross-region values never touch global
+memory.  ``traffic`` takes ``in_global`` flags (a non-global input is a
+VMEM-resident value: consuming it loads nothing) and ``resident_out``
+flags (a resident output is kept in VMEM for a same-kernel consumer:
+producing it stores nothing); :func:`group_traffic` aggregates a region
+group's members under those flags with a single launch — the cost of the
+megakernel that actually runs.
 """
 
 from __future__ import annotations
@@ -31,7 +40,7 @@ from __future__ import annotations
 from collections import Counter
 from dataclasses import dataclass, field
 from math import prod
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.graph import (FuncNode, Graph, InputNode, MapNode, MiscNode,
                               OutputNode, ReduceNode, VType)
@@ -81,7 +90,8 @@ def _n_items(dims: Tuple[str, ...], sizes: Dict[str, int],
 def _walk(g: Graph, in_types: Sequence[VType], in_global: Sequence[bool],
           mult: float, sizes: Dict[str, int], t: Traffic, top: bool,
           causal: Dict[str, str] = {},
-          enclosing: frozenset = frozenset()) -> None:
+          enclosing: frozenset = frozenset(),
+          skip_oids: frozenset = frozenset()) -> None:
     types = g.infer_types(in_types)
     glob: Dict[Tuple[int, int], bool] = {}
     for nid, gl in zip(g.input_ids, in_global):
@@ -107,7 +117,9 @@ def _walk(g: Graph, in_types: Sequence[VType], in_global: Sequence[bool],
             if glob[(nid, p)] and not vt.is_list and cons:
                 t.loads[vt.item] += mult
                 glob[(nid, p)] = False  # now in a local temp
-            if vt.is_list:
+            if vt.is_list and glob[(nid, p)]:
+                # a VMEM-resident list (in_global False) is read in
+                # place: the reduce costs no global loads
                 for e in cons:
                     if isinstance(g.nodes[e.dst], ReduceNode):
                         t.loads[vt.item] += mult * _n_items(
@@ -115,6 +127,8 @@ def _walk(g: Graph, in_types: Sequence[VType], in_global: Sequence[bool],
 
     if top:  # item-typed program outputs get a single store
         for oid in g.output_ids:
+            if oid in skip_oids:
+                continue  # VMEM-resident output: no global store
             e = g.in_edge(oid, 0)
             vt = types[(e.src, e.sp)]
             if not vt.is_list:
@@ -148,7 +162,8 @@ def _walk(g: Graph, in_types: Sequence[VType], in_global: Sequence[bool],
             for p, oid in enumerate(node.inner.output_ids):
                 ie = node.inner.in_edge(oid, 0)
                 ivt = inner_tmap[(ie.src, ie.sp)]
-                consumed = bool(g.out_edges(nid, p))
+                consumed = any(e.dst not in skip_oids
+                               for e in g.out_edges(nid, p))
                 if node.reduced[p] is None and not ivt.is_list and consumed:
                     # the list materializes here: one store per iteration
                     t.stores[ivt.item] += mult * dim_n
@@ -157,14 +172,65 @@ def _walk(g: Graph, in_types: Sequence[VType], in_global: Sequence[bool],
                   enclosing=enclosing | {node.dim})
 
 
-def traffic(g: Graph, sizes: Dict[str, int]) -> Traffic:
+def traffic(g: Graph, sizes: Dict[str, int],
+            in_global: Optional[Sequence[bool]] = None,
+            resident_out: Optional[Sequence[bool]] = None) -> Traffic:
+    """Global-memory traffic of ``g``.
+
+    ``in_global`` (per ``g.input_ids``): ``False`` marks an input that is
+    already VMEM-resident — consuming it loads nothing.  ``resident_out``
+    (per ``g.output_ids``): ``True`` marks an output kept in VMEM for a
+    same-kernel consumer — producing it stores nothing.  Both default to
+    the historical all-global accounting.
+    """
     t = Traffic()
     in_types = [g.nodes[nid].vtype for nid in g.input_ids]
     causal = dict(getattr(g, "causal_dims", None) or {})
-    _walk(g, in_types, [True] * len(in_types), 1, sizes, t, top=True,
-          causal=causal)
+    glob = (list(in_global) if in_global is not None
+            else [True] * len(in_types))
+    if len(glob) != len(in_types):
+        raise ValueError("in_global length != number of inputs")
+    skip: frozenset = frozenset()
+    if resident_out is not None:
+        if len(resident_out) != len(g.output_ids):
+            raise ValueError("resident_out length != number of outputs")
+        skip = frozenset(oid for oid, r in zip(g.output_ids, resident_out)
+                         if r)
+    _walk(g, in_types, glob, 1, sizes, t, top=True, causal=causal,
+          skip_oids=skip)
     t.launches = len(g.op_nodes())
     return t
+
+
+def group_traffic(group, sizes: Dict[str, int]) -> Traffic:
+    """Aggregate traffic of one region-group megakernel.
+
+    ``group`` is a ``regions.RegionGroup`` (duck-typed: ``members`` with
+    per-member ``graph``/``in_refs``/``out_refs``, plus the group-level
+    ``out_refs``).  Member traffic is summed with every in-group edge
+    uncharged — an input produced by a fellow member is VMEM-resident
+    (loads nothing) and an output consumed only inside the group stores
+    nothing — and the whole group costs exactly one kernel launch.  A
+    global input shared by several members is charged once (the first
+    consumer pays the load): the emitted kernel dedupes it to a single
+    input with one BlockSpec fetch, and later stages read the same VMEM
+    copy.
+    """
+    produced = {r for m in group.members for r in m.out_refs}
+    spilled = set(group.out_refs)
+    seen: set = set()
+    total = Traffic()
+    for m in group.members:
+        t = traffic(m.graph, sizes,
+                    in_global=[r not in produced and r not in seen
+                               for r in m.in_refs],
+                    resident_out=[r not in spilled for r in m.out_refs])
+        seen.update(m.in_refs)
+        total.loads.update(t.loads)
+        total.stores.update(t.stores)
+        total.work.update(t.work)
+    total.launches = 1
+    return total
 
 
 def traffic_bytes(g: Graph, sizes: Dict[str, int],

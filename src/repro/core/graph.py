@@ -42,6 +42,12 @@ class VType:
         return len(self.dims) > 0
 
     @property
+    def item_ndim(self) -> int:
+        """Array rank of one item of this kind (block 2, vector 1,
+        scalar 0)."""
+        return _ITEM_NDIM[self.item]
+
+    @property
     def lead_dims(self) -> int:
         """Leading list dims beyond the item rank.  In the merged dense
         layout (pipeline/packing.py) and the Pallas lowering these are

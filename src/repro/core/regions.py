@@ -19,15 +19,28 @@ model already charged for (a list edge inside a map is buffered, paper
 its own input/output boundary plus the wiring (which top-level values
 feed it, which it produces) that the executor threads between kernels.
 
+``group_plan`` is the region-group scheduler on top: it greedily merges
+regions whose parallel-map spines are compatible — a producer→consumer
+chain may shrink the shared grid to the intersection of the members'
+parallel dims (the off-grid dims of each member then evaluate in-kernel
+over whole-VMEM-resident data), independent siblings merge only at
+set-equal grids — subject to a VMEM budget.  Every cross-region value
+whose producer and consumers share a group becomes a VMEM-resident
+carry instead of a merged global array, and the Pallas backend emits
+one multi-stage ``pallas_call`` per *group*: fewer launches, less HBM
+traffic, with spills to global memory only where the budget or grid
+compatibility forces them.
+
 Everything here is pure graph surgery — no jax imports — so the
-selection layer can reuse it for per-region traffic attribution.
+selection layer can reuse it for per-kernel traffic attribution.
 """
 
 from __future__ import annotations
 
 import copy
+import os
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.graph import (FuncNode, Graph, InputNode, MapNode, MiscNode,
                               Node, OutputNode, Ref, ReduceNode)
@@ -383,3 +396,247 @@ def plan_program(g: Graph) -> ProgramPlan:
         regions.append(RegionSpec(nid, node.label(), tuple(grid_dims),
                                   red_dim, rg, in_refs, out_refs))
     return ProgramPlan(part, regions)
+
+
+# ---------------------------------------------------------------------------
+# Region grouping: pack compatible regions into megakernels
+# ---------------------------------------------------------------------------
+
+# half a TPU core's ~16 MiB VMEM: room for double-buffered input windows
+# next to the resident carries
+DEFAULT_VMEM_BUDGET = 8 << 20
+VMEM_BUDGET_ENV = "REPRO_VMEM_BUDGET_BYTES"
+
+
+@dataclass
+class RegionGroup:
+    """One megakernel's worth of regions.
+
+    ``members`` run in sequence inside a single kernel whose grid is
+    ``grid_dims`` (a subset of every member's parallel spine — members'
+    off-grid dims evaluate in-kernel over whole-resident data).
+    ``resident`` lists the cross-region values that never leave VMEM:
+    produced by one member, consumed only by later members.  ``out_refs``
+    are the values spilled to global memory (consumed by other groups or
+    program outputs)."""
+
+    gid: str
+    members: List[RegionSpec]
+    grid_dims: Tuple[str, ...]
+    in_refs: List[Ref]
+    out_refs: List[Ref]
+    resident: List[Ref]
+
+    @property
+    def label(self) -> str:
+        return "+".join(m.label for m in self.members)
+
+
+@dataclass
+class GroupedPlan:
+    """The region DAG packed into kernel-sized groups (topological
+    order): launching the groups in sequence, threading the spilled
+    ``out_refs`` between them, evaluates the program."""
+
+    plan: ProgramPlan
+    groups: List[RegionGroup] = field(default_factory=list)
+    budget_bytes: int = DEFAULT_VMEM_BUDGET
+
+    @property
+    def n_launches(self) -> int:
+        return len(self.groups)
+
+    @property
+    def n_resident_edges(self) -> int:
+        return sum(len(g.resident) for g in self.groups)
+
+
+def vmem_budget(budget_bytes: Optional[int] = None) -> int:
+    """The grouping VMEM budget: explicit argument, else
+    ``$REPRO_VMEM_BUDGET_BYTES``, else :data:`DEFAULT_VMEM_BUDGET`."""
+    if budget_bytes is not None:
+        return int(budget_bytes)
+    return int(os.environ.get(VMEM_BUDGET_ENV, DEFAULT_VMEM_BUDGET))
+
+
+def _est_value_bytes(vt, dims: Dict[str, int],
+                     blocks: Optional[Dict[str, int]],
+                     grid: frozenset) -> int:
+    """Estimated in-kernel VMEM footprint (f32) of one value: grid dims
+    contribute one block, off-grid dims are whole-resident.  Intermediate
+    item extents are approximated by the per-dim block sizes — a budget
+    estimate, not the emitted shapes."""
+    blocks = blocks or {}
+    default_b = max([int(b) for b in blocks.values()] or [8])
+    lead = vt.lead_dims
+    split = vt.dims[lead:]
+    n = 1
+    for d in vt.dims[:lead]:
+        n *= 1 if d in grid else dims.get(d, 1)
+    for d in split:
+        b = int(blocks.get(d, default_b))
+        n *= b if d in grid else b * dims.get(d, 1)
+    for _ in range(vt.item_ndim - len(split)):
+        n *= default_b
+    return 4 * n
+
+
+def _group_bytes(regions: Sequence[RegionSpec], member_ids: Sequence[int],
+                 types, dims, blocks, grid: frozenset) -> int:
+    refs = set()
+    for i in member_ids:
+        refs.update(regions[i].in_refs)
+        refs.update(regions[i].out_refs)
+    return sum(_est_value_bytes(types[r], dims, blocks, grid)
+               for r in refs)
+
+
+def _finish_groups(plan: ProgramPlan, member_sets: List[List[int]],
+                   grids: List[Tuple[str, ...]], budget: int) -> GroupedPlan:
+    """Materialize ``RegionGroup``s in a deterministic topological order
+    of the group-level DAG and classify each cross-region value as
+    resident (in-VMEM carry) or spilled (global array)."""
+    regions = plan.regions
+    prod_group: Dict[Ref, int] = {}
+    for gi, members in enumerate(member_sets):
+        for i in members:
+            for r in regions[i].out_refs:
+                prod_group[r] = gi
+    deps: List[set] = [set() for _ in member_sets]
+    for gi, members in enumerate(member_sets):
+        for i in members:
+            for r in regions[i].in_refs:
+                pg = prod_group.get(r)
+                if pg is not None and pg != gi:
+                    deps[gi].add(pg)
+    order: List[int] = []
+    done: set = set()
+    ready = sorted(gi for gi in range(len(member_sets)) if not deps[gi])
+    while ready:
+        gi = ready.pop(0)
+        order.append(gi)
+        done.add(gi)
+        newly = sorted(gj for gj in range(len(member_sets))
+                       if gj not in done and gj not in ready
+                       and deps[gj] <= done)
+        ready = sorted(ready + newly)
+    if len(order) != len(member_sets):
+        raise RegionError("cycle in region-group DAG")  # join checks failed
+
+    program_outs = {(e.src, e.sp) for oid in plan.graph.output_ids
+                    for e in [plan.graph.in_edge(oid, 0)]}
+    consumers: Dict[Ref, set] = {}
+    for gi, members in enumerate(member_sets):
+        for i in members:
+            for r in regions[i].in_refs:
+                consumers.setdefault(r, set()).add(gi)
+
+    groups: List[RegionGroup] = []
+    for k, gi in enumerate(order):
+        members = [regions[i] for i in member_sets[gi]]
+        produced = {r for m in members for r in m.out_refs}
+        in_refs: List[Ref] = []
+        for m in members:
+            for r in m.in_refs:
+                if r not in produced and r not in in_refs:
+                    in_refs.append(r)
+        out_refs: List[Ref] = []
+        resident: List[Ref] = []
+        for m in members:
+            for r in m.out_refs:
+                spill = (r in program_outs
+                         or consumers.get(r, set()) - {gi})
+                if spill:
+                    out_refs.append(r)
+                elif r in consumers:
+                    resident.append(r)
+                else:  # produced but consumed nowhere: keep as output
+                    out_refs.append(r)
+        gid = f"g{k}:" + "+".join(str(m.node) for m in members)
+        groups.append(RegionGroup(gid, members, grids[gi], in_refs,
+                                  out_refs, resident))
+    return GroupedPlan(plan, groups, budget)
+
+
+def ungrouped_plan(plan: ProgramPlan) -> GroupedPlan:
+    """Every region in its own group — the pre-grouping one-kernel-per-
+    region lowering, as a ``GroupedPlan`` so both paths share one
+    executor shape."""
+    return _finish_groups(plan, [[i] for i in range(len(plan.regions))],
+                          [spec.grid_dims for spec in plan.regions],
+                          budget=0)
+
+
+def group_plan(plan: ProgramPlan, dims: Dict[str, int],
+               blocks: Optional[Dict[str, int]] = None, *,
+               budget_bytes: Optional[int] = None) -> GroupedPlan:
+    """Greedily pack the region DAG into megakernel groups.
+
+    Regions are visited in topological order; each joins the first
+    existing group it is compatible with, preferring groups that produce
+    one of its inputs (the join turns that edge into a VMEM-resident
+    carry).  Compatibility:
+
+    * **chained** (the candidate consumes a group output): the shared
+      grid shrinks to the intersection of the group grid and the
+      candidate's parallel dims — non-empty, and never containing the
+      candidate's serial dim;
+    * **siblings** (no edge): grids must be set-equal — shrinking a grid
+      for an unrelated region buys no traffic, only VMEM;
+    * joining must not create a kernel-level cycle through a region
+      outside the group;
+    * the group's estimated VMEM footprint (every boundary and resident
+      value at the — possibly shrunk — grid) must fit ``budget_bytes``
+      (default ``$REPRO_VMEM_BUDGET_BYTES`` or 8 MiB).
+
+    The result is deterministic for a given (plan, dims, blocks,
+    budget): selection's per-kernel costing and the Pallas emitter
+    re-derive identical groupings.
+    """
+    budget = vmem_budget(budget_bytes)
+    regions = plan.regions
+    types = plan.graph.infer_types()
+    prod_of: Dict[Ref, int] = {}
+    for i, spec in enumerate(regions):
+        for r in spec.out_refs:
+            prod_of[r] = i
+    deps = [sorted({prod_of[r] for r in spec.in_refs if r in prod_of})
+            for spec in regions]
+    anc: List[set] = [set() for _ in regions]
+    for i in range(len(regions)):
+        for p in deps[i]:
+            anc[i] |= anc[p] | {p}
+
+    member_sets: List[List[int]] = []
+    grids: List[Tuple[str, ...]] = []
+    gidx: Dict[int, int] = {}
+    for i, spec in enumerate(regions):
+        sdims = set(spec.grid_dims)
+        connected = sorted({gidx[p] for p in deps[i]})
+        placed = None
+        for gi in connected + [g for g in range(len(member_sets))
+                               if g not in connected]:
+            newgrid = tuple(d for d in grids[gi] if d in sdims)
+            if not newgrid:
+                continue
+            if gi not in connected and (set(grids[gi]) != sdims):
+                continue  # sibling joins never shrink the group's grid
+            if spec.red_dim is not None and spec.red_dim in newgrid:
+                continue
+            gset = set(member_sets[gi])
+            if any(anc[k] & gset for k in (anc[i] - gset)):
+                continue  # would order-cycle through an outside region
+            if _group_bytes(regions, member_sets[gi] + [i], types, dims,
+                            blocks, frozenset(newgrid)) > budget:
+                continue
+            member_sets[gi].append(i)
+            grids[gi] = newgrid
+            placed = gi
+            break
+        if placed is None:
+            gidx[i] = len(member_sets)
+            member_sets.append([i])
+            grids.append(tuple(spec.grid_dims))
+        else:
+            gidx[i] = placed
+    return _finish_groups(plan, member_sets, grids, budget)

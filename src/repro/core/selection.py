@@ -69,31 +69,45 @@ def snapshot_cost(g: Graph, dims: Dict[str, int],
     return prof.cost(C.traffic(g, dims))
 
 
+def group_cost(group, dims: Dict[str, int],
+               item_bytes: Optional[Dict[str, int]] = None,
+               profile: Optional[CAL.CalibrationProfile] = None) -> float:
+    """Cost of one region-group megakernel under a calibration profile:
+    member traffic with every VMEM-resident edge uncharged (no stores by
+    the producer, no loads by in-group consumers) plus exactly one
+    kernel launch — the residency-aware cost of what actually runs."""
+    prof = CAL.resolve_profile(item_bytes, profile)
+    return prof.cost(C.group_traffic(group, dims))
+
+
 def region_costs(g: Graph, dims: Dict[str, int],
                  item_bytes: Optional[Dict[str, int]] = None,
                  plan=None,
                  profile: Optional[CAL.CalibrationProfile] = None
                  ) -> Optional[Tuple[float, ...]]:
-    """Per-region traffic attribution of one snapshot.
+    """Per-kernel traffic attribution of one snapshot.
 
-    The Pallas backend executes a snapshot as its region partition
-    (``core/regions.py``): one kernel per region, with every
-    cross-region value materialized in global memory.  Each entry is
-    ``snapshot_cost`` of one region's standalone program (its loads
-    include re-reading cross-region inputs, its launch count is exactly
-    one), so the tuple is the honest per-kernel cost breakdown of what
-    actually runs — ``core/timing.region_times`` pairs each entry with
-    that kernel's wall time, which is what ``core/calibrate.py`` fits.
-    Returns ``None`` for programs the partitioner cannot split
-    (MiscNode-bearing graphs take the whole-program fallback).  Pass a
-    precomputed ``regions.ProgramPlan`` via ``plan`` to avoid
-    re-partitioning (the driver shares one plan with the lowering)."""
+    The Pallas backend executes a snapshot as its grouped region
+    partition (``core/regions.py``): one kernel per region *group*,
+    with in-group cross-region values VMEM-resident and only
+    cross-group values materialized in global memory.  Pass the
+    ``regions.GroupedPlan`` the lowering uses via ``plan`` to get one
+    :func:`group_cost` entry per emitted kernel (the honest per-kernel
+    breakdown ``core/timing.region_times`` pairs wall times with, by
+    kernel id); pass a ``regions.ProgramPlan`` (or nothing) for the
+    ungrouped per-region attribution — each entry ``snapshot_cost`` of
+    one region's standalone program.  Returns ``None`` for programs the
+    partitioner cannot split (MiscNode-bearing graphs take the
+    whole-program fallback)."""
     from repro.core import regions as R
     if plan is None:
         try:
             plan = R.plan_program(g)
         except R.RegionError:
             return None
+    if isinstance(plan, R.GroupedPlan):
+        return tuple(group_cost(grp, dims, item_bytes, profile)
+                     for grp in plan.groups)
     return tuple(snapshot_cost(spec.graph, dims, item_bytes, profile)
                  for spec in plan.regions)
 

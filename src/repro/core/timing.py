@@ -6,11 +6,14 @@ predict -> run -> measure -> recalibrate loop.
   timed calls, each fenced with ``jax.block_until_ready`` so async
   dispatch cannot leak work across the stopwatch.
 * :func:`region_times` — per-kernel timing of a compiled
-  ``pipeline.CompiledKernel`` on the Pallas backend: each region of the
-  ``ProgramPlan`` is timed standalone (inputs threaded exactly as the
-  real execution threads them), so entry *i* pairs with entry *i* of
-  ``CompiledKernel.region_costs`` — the (features, seconds) samples
-  ``core/calibrate.py`` fits.
+  ``pipeline.CompiledKernel`` on the Pallas backend: each emitted
+  kernel (a region-group megakernel counts once) is timed standalone
+  with inputs threaded exactly as the real execution threads them.
+  Entries carry the kernel id; :func:`pair_region_times` matches them
+  with ``CompiledKernel.region_costs`` *by id* — the (features,
+  seconds) samples ``core/calibrate.py`` fits — and
+  :func:`stage_time_attribution` splits a megakernel's time across its
+  member regions.
 * :func:`synth_inputs` — synthetic merged inputs for a program at given
   dims/block extents (position vectors get ``arange``, data gets scaled
   normals), shared by the measured autotuner and the benchmarks.
@@ -128,6 +131,7 @@ def synth_inputs(g: Graph, dims: Dict[str, int],
 class RegionTime:
     label: str
     result: TimingResult
+    gid: str = ""  # id of the emitted kernel (codegen_pallas.KernelRun)
 
     @property
     def median_s(self) -> float:
@@ -136,33 +140,104 @@ class RegionTime:
 
 def region_times(kern, inputs: Dict[str, Any], *, warmup: int = 1,
                  repeats: int = 5) -> Optional[List[RegionTime]]:
-    """Wall time of each region kernel of a compiled Pallas
-    ``CompiledKernel``, in plan order — entry *i* pairs with
-    ``kern.region_costs[i]`` and ``kern.lowering_report.regions[i]``.
+    """Wall time of each emitted kernel of a compiled Pallas
+    ``CompiledKernel``.  One entry per launched kernel (a region-group
+    megakernel serving several regions is one entry), each carrying the
+    kernel id (``gid``) — pair with ``kern.region_costs`` via
+    :func:`pair_region_times`, never by position.
 
-    The regions are executed in topological order with real
+    The kernels are executed in topological order with real
     intermediates threaded between them (exactly what ``kern(inputs)``
-    does), but each region is warmed up and timed standalone.  Returns
+    does), but each kernel is warmed up and timed standalone.  Returns
     ``None`` for kernels that do not expose region runners (py/jax
     backends)."""
     raw = getattr(getattr(kern, "_fn", None), "raw_program", None)
     runners = getattr(raw, "region_runners", None)
     if runners is None:
         return None
+    try:  # time the COMPILED kernel: eager interpret-mode dispatch costs
+        import jax  # scale with the traced body size, not with traffic,
+        jit = jax.jit  # which would skew megakernel-vs-region comparisons
+    except ImportError:  # pragma: no cover - jax is a hard dep in-repo
+        def jit(f):
+            return f
     merged = [inputs[nm] for nm in kern.in_names]
     env: Dict[Tuple[int, int], Any] = dict(zip(raw.input_refs, merged))
     out: List[RegionTime] = []
     for spec, fn in runners:
+        jfn = jit(fn)
         args = [env[r] for r in spec.in_refs]
-        # the first warmup call doubles as the real execution whose
-        # outputs thread into downstream regions — no extra call
-        outs = fn(*args)
+        # the first warmup call (also the trace+compile) doubles as the
+        # real execution whose outputs thread into downstream kernels
+        outs = jfn(*args)
         _sync(outs)
         for ref, o in zip(spec.out_refs, outs):
             env[ref] = o
-        res = time_callable(fn, *args, warmup=max(warmup - 1, 0),
+        res = time_callable(jfn, *args, warmup=max(warmup - 1, 0),
                             repeats=repeats)
-        out.append(RegionTime(spec.label, res))
+        out.append(RegionTime(spec.label, res, getattr(spec, "gid", "")))
+    return out
+
+
+def pair_region_times(kern, times: Sequence[RegionTime]
+                      ) -> List[Tuple[str, float, float]]:
+    """Explicit id-based pairing of measured kernel times with the
+    driver's per-kernel cost attribution: ``(gid, predicted cost,
+    measured seconds)`` for every kernel present in BOTH
+    ``kern.kernel_ids``/``kern.region_costs`` and ``times``.  Robust to
+    a kernel serving several regions and to emission-time degradation
+    (a degraded group's kernels carry derived ids and simply do not
+    pair)."""
+    ids = getattr(kern, "kernel_ids", None)
+    costs = getattr(kern, "region_costs", None)
+    if not ids or not costs or len(ids) != len(costs):
+        return []
+    cost_of = dict(zip(ids, costs))
+    out = []
+    for t in times:
+        if t.gid in cost_of:
+            out.append((t.gid, float(cost_of[t.gid]), t.median_s))
+    return out
+
+
+def stage_time_attribution(kern, times: Sequence[RegionTime]
+                           ) -> List[Tuple[str, str, float]]:
+    """Attribute each measured kernel time to the *regions* it serves:
+    ``(gid, region label, seconds)`` rows where a megakernel's wall time
+    is split across its member regions proportionally to their analytic
+    standalone costs (``selection.snapshot_cost`` of each region graph —
+    a model-based attribution, since stages inside one ``pallas_call``
+    cannot be fenced individually).  Single-region kernels get their
+    full time."""
+    report = getattr(kern, "lowering_report", None)
+    if report is None:
+        return []
+    labels_of: Dict[str, List[str]] = {}
+    for r in report.regions:
+        labels_of.setdefault(r.group, []).append(r.label)
+    weights_of: Dict[str, List[float]] = {}
+    from repro.core import regions as R
+    from repro.core import selection as SEL
+    try:
+        gp = R.group_plan(R.plan_program(kern.graph), kern.dims,
+                          kern.blocks)
+    except R.RegionError:  # un-partitionable kernel graph: equal split
+        gp = None
+    # only trust the re-derived grouping when it reproduces the
+    # kernel's own ids (it may not, e.g. under a changed VMEM budget)
+    if gp is not None and (tuple(grp.gid for grp in gp.groups)
+                           == tuple(kern.kernel_ids or ())):
+        for grp in gp.groups:
+            labels_of[grp.gid] = [m.label for m in grp.members]
+            weights_of[grp.gid] = [SEL.snapshot_cost(m.graph, kern.dims)
+                                   for m in grp.members]
+    out = []
+    for t in times:
+        labels = labels_of.get(t.gid, [t.label])
+        weights = weights_of.get(t.gid, [1.0] * len(labels))
+        total = sum(weights) or 1.0
+        for lbl, w in zip(labels, weights):
+            out.append((t.gid, lbl, t.median_s * w / total))
     return out
 
 

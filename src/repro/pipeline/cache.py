@@ -34,7 +34,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.graph import Graph
 
-_SCHEMA_VERSION = 2  # v2: CachePlan gained per-region traffic attribution
+_SCHEMA_VERSION = 3  # v3: per-kernel ids + launch/residency provenance
 
 # Version salt for everything downstream of the graph fingerprint: fusion
 # rules, the selection cost model, and the three backend code generators.
@@ -44,8 +44,10 @@ _SCHEMA_VERSION = 2  # v2: CachePlan gained per-region traffic attribution
 # (mask-aware cost model, lead-dim packing).  v3: region-partitioned
 # multi-kernel Pallas lowering (every snapshot lowers; the walk-back to
 # the final snapshot is gone, so old pallas plans describe kernels this
-# build would never emit).
-CODEGEN_VERSION = 3
+# build would never emit).  v4: region-group megakernels (compatible
+# regions share one pallas_call with VMEM-resident cross-region values;
+# per-kernel costs are residency-aware and paired by kernel id).
+CODEGEN_VERSION = 4
 
 DEFAULT_MAX_DISK_BYTES = 1 << 30  # 1 GiB
 
@@ -91,29 +93,46 @@ class CachePlan:
     cost: float
     costs: Tuple[float, ...]
     initial_cost: float
-    # per-region traffic attribution of the selected snapshot (pallas
-    # backend: one entry per emitted kernel), None for other backends
+    # per-kernel traffic attribution of the selected snapshot (pallas
+    # backend: one entry per emitted kernel — a region-group megakernel
+    # counts once), None for other backends
     region_costs: Optional[Tuple[float, ...]] = None
     # wall seconds of the winning config when the plan came from a
     # measured autotune sweep (optional key; absent in older entries)
     measured_s: Optional[float] = None
+    # stable ids of the emitted kernels, aligned with region_costs — the
+    # timing harness pairs measured kernel times with costs by id
+    kernel_ids: Optional[Tuple[str, ...]] = None
+    # grouped-lowering provenance: kernels launched per call and
+    # cross-region values kept VMEM-resident
+    launches: Optional[int] = None
+    resident_edges: Optional[int] = None
 
     def to_json(self) -> Dict[str, Any]:
         d = asdict(self)
         d["costs"] = list(self.costs)
         d["region_costs"] = (list(self.region_costs)
                              if self.region_costs is not None else None)
+        d["kernel_ids"] = (list(self.kernel_ids)
+                           if self.kernel_ids is not None else None)
         return d
 
     @classmethod
     def from_json(cls, d: Dict[str, Any]) -> "CachePlan":
         rc = d.get("region_costs")
         ms = d.get("measured_s")
+        kids = d.get("kernel_ids")
+        launches = d.get("launches")
+        resident = d.get("resident_edges")
         return cls(int(d["snapshot_index"]), dict(d["dims"]),
                    float(d["cost"]), tuple(d["costs"]),
                    float(d["initial_cost"]),
                    tuple(rc) if rc is not None else None,
-                   float(ms) if ms is not None else None)
+                   float(ms) if ms is not None else None,
+                   tuple(str(k) for k in kids) if kids is not None
+                   else None,
+                   int(launches) if launches is not None else None,
+                   int(resident) if resident is not None else None)
 
 
 @dataclass

@@ -13,12 +13,17 @@ Backends:
 * ``"jax"``    — ``codegen_jax.compile_program`` under ``jax.jit``
                  (vmap/scan lowering; runs everywhere, differentiable).
 * ``"pallas"`` — ``codegen_pallas.emit_program``: the selected snapshot
-                 is partitioned into spine regions and lowered to one
-                 real multi-output ``pallas_call`` per region
-                 (interpret-mode off-TPU); fully fused snapshots are a
-                 single mega-kernel.  Requires ``blocks`` (per-dim block
-                 sizes).  ``CompiledKernel.lowering_report`` records the
-                 regions emitted and fallbacks taken (zero for every
+                 is partitioned into spine regions, the regions are
+                 packed into megakernel *groups* (compatible parallel
+                 spines share one kernel, cross-region values stay
+                 VMEM-resident, under a VMEM budget), and each group
+                 lowers to one real multi-stage ``pallas_call``
+                 (interpret-mode off-TPU); the chained schedule runs
+                 under ``jax.jit`` with dying intermediates donated via
+                 ``input_output_aliases``.  Requires ``blocks`` (per-dim
+                 block sizes).  ``CompiledKernel.lowering_report``
+                 records the regions emitted, kernels launched,
+                 resident edges, and fallbacks taken (zero for every
                  in-repo program — there is no walk-back to a
                  differently-fused snapshot: what selection picked is
                  what runs).
@@ -73,11 +78,13 @@ class CompiledKernel:
     in_names: List[str]
     out_names: List[str]
     _fn: Callable[[Dict[str, Any]], Dict[str, Any]] = None  # type: ignore
-    # pallas backend only: regions emitted / fallbacks taken (see
-    # codegen_pallas.LoweringReport) and the cost model's per-region
-    # traffic attribution of the selected snapshot
+    # pallas backend only: regions emitted / fallbacks taken / kernels
+    # launched (see codegen_pallas.LoweringReport) and the cost model's
+    # residency-aware per-kernel traffic attribution of the selected
+    # snapshot, with the kernel ids the timing harness pairs against
     lowering_report: Optional[Any] = None
     region_costs: Optional[Tuple[float, ...]] = None
+    kernel_ids: Optional[Tuple[str, ...]] = None
     # autotune="measured" only: the winner's wall seconds and every
     # (dims, seconds) candidate the autotuner timed (the analytic choice
     # is always among them)
@@ -94,6 +101,27 @@ class CompiledKernel:
     @property
     def predicted_traffic_reduction(self) -> float:
         return self.initial_cost / max(self.cost, 1e-30)
+
+    @property
+    def launches(self) -> Optional[int]:
+        """Kernels launched per call (pallas: groups emitted)."""
+        return (self.lowering_report.launches
+                if self.lowering_report is not None else None)
+
+    @property
+    def resident_edges(self) -> Optional[int]:
+        """Cross-region values kept VMEM-resident instead of
+        round-tripping through global memory (pallas grouped lowering)."""
+        return (self.lowering_report.resident_edges
+                if self.lowering_report is not None else None)
+
+    @property
+    def grouped_cost(self) -> Optional[float]:
+        """Residency-aware predicted cost of what actually runs: the sum
+        of the per-kernel attributions (``cost`` is the paper model's
+        snapshot cost, which charges every cross-region edge)."""
+        return (sum(self.region_costs)
+                if self.region_costs is not None else None)
 
 
 def _io_info(g: Graph):
@@ -143,7 +171,7 @@ def _lower_jax(g: Graph, dims: Dict[str, int], jit: bool):
 
 def _region_plan(g: Graph):
     """Partition the selected snapshot once; the plan is shared between
-    per-region cost attribution and the Pallas lowering.  ``None`` when
+    per-kernel cost attribution and the Pallas lowering.  ``None`` when
     the partitioner cannot split (emit_program then takes the
     whole-program fallback)."""
     from repro.core import regions as REG
@@ -153,11 +181,27 @@ def _region_plan(g: Graph):
         return None
 
 
+def _grouped_plan(pplan, dims: Dict[str, int],
+                  blocks: Optional[Dict[str, int]], group: bool):
+    """Pack the region DAG into megakernel groups (or one-region groups
+    when ``group=False``) — shared between costing and lowering."""
+    from repro.core import regions as REG
+    if pplan is None:
+        return None
+    return (REG.group_plan(pplan, dims, blocks) if group
+            else REG.ungrouped_plan(pplan))
+
+
 def _lower_pallas(g: Graph, dims: Dict[str, int],
                   blocks: Optional[Dict[str, int]], interpret: bool,
-                  program_plan=None):
+                  program_plan=None, grouped_plan=None,
+                  group: bool = True, jit: bool = True):
     """Lower the selected snapshot itself — no walking back to a
-    differently-fused candidate.  Returns (call, LoweringReport)."""
+    differently-fused candidate.  Returns (call, LoweringReport).  The
+    chained kernel schedule runs under ``jax.jit`` (when ``jit``) so
+    XLA plans the spilled intermediate buffers once and the per-kernel
+    ``input_output_aliases`` donations actually reuse them."""
+    import jax
     from repro.core.codegen_pallas import emit_program
     if blocks is None:
         raise ValueError(
@@ -166,7 +210,8 @@ def _lower_pallas(g: Graph, dims: Dict[str, int],
     if missing:
         raise ValueError(f"blocks missing sizes for dims {missing}")
     f, report = emit_program(g, dims, blocks, interpret=interpret,
-                             program_plan=program_plan)
+                             program_plan=program_plan,
+                             grouped_plan=grouped_plan, group=group)
     if report.fallbacks:
         warnings.warn(
             "pallas lowering fallback: "
@@ -174,13 +219,14 @@ def _lower_pallas(g: Graph, dims: Dict[str, int],
             f"jax backend ({report.summary()})", RuntimeWarning,
             stacklevel=3)
     in_info, out_info = _io_info(g)
+    exec_f = jax.jit(f) if jit else f
 
     def call(inputs: Dict[str, Any]) -> Dict[str, Any]:
-        outs = f(*[inputs[nm] for nm, _ in in_info])
+        outs = exec_f(*[inputs[nm] for nm, _ in in_info])
         return {nm: o for (nm, _), o in zip(out_info, outs)}
 
-    # the raw emit_program callable carries the per-region runners the
-    # timing harness (core/timing.region_times) needs
+    # the raw (un-jitted) emit_program callable carries the per-kernel
+    # runners the timing harness (core/timing.region_times) needs
     call.raw_program = f
     return call, report
 
@@ -191,7 +237,7 @@ def _measure_harness(graph: Graph,
                      interpret, jit: bool,
                      item_bytes: Optional[Dict[str, int]],
                      profile, fused: bool, cache: KernelCache,
-                     repeats: int) -> Callable:
+                     repeats: int, group: bool = True) -> Callable:
     """The ``measure`` callback ``selection.autotune(objective=
     "measured")`` calls for each top-K survivor: compile the candidate
     through this same driver (so the in-process kernel cache absorbs
@@ -228,7 +274,7 @@ def _measure_harness(graph: Graph,
         # notably interpret mode (orders of magnitude slower) and the
         # repeat count
         mkey = (fp, dkey, backend, dev, tuple(sorted(total.items())),
-                bool(jit), fused, interpret, repeats)
+                bool(jit), fused, interpret, repeats, group)
 
         def thunk() -> float:
             kern = compile(graph, dict(sel.dims), backend=backend,
@@ -236,7 +282,7 @@ def _measure_harness(graph: Graph,
                                    else blocks),
                            item_bytes=item_bytes, fused=fused,
                            interpret=interpret, jit=jit, profile=profile,
-                           cache=cache)
+                           cache=cache, group=group)
             kernels[dkey] = kern
             inputs = T.synth_inputs(graph, sel.dims, cand_blocks)
             return T.time_callable(kern, inputs, warmup=1,
@@ -260,7 +306,8 @@ def compile(graph: Graph, dims: Optional[Dict[str, int]] = None, *,
             autotune: str = "analytic",
             profile: Optional[CAL.CalibrationProfile] = None,
             top_k: int = 3,
-            measure_repeats: int = 3) -> CompiledKernel:
+            measure_repeats: int = 3,
+            group: bool = True) -> CompiledKernel:
     """Compile a block program into an executing, cached kernel.
 
     Either ``dims`` (fixed block counts -> ``selection.select``) or
@@ -268,6 +315,13 @@ def compile(graph: Graph, dims: Optional[Dict[str, int]] = None, *,
     also picks the dims) must be given.  ``fused=False`` skips the fusion
     algorithm — the unfused Table-2 program compiles as-is; that is the
     benchmark baseline.
+
+    ``group`` (pallas backend) controls region-group megakernel
+    lowering: by default compatible regions of the selected snapshot
+    share one multi-stage ``pallas_call`` with cross-region values held
+    in VMEM (``regions.group_plan``, gated by the
+    ``$REPRO_VMEM_BUDGET_BYTES`` budget); ``group=False`` keeps the
+    one-kernel-per-region lowering.
 
     ``autotune="measured"`` (with ``dim_candidates``) closes the
     predict -> run -> measure loop: the calibrated analytic model prunes
@@ -309,9 +363,18 @@ def compile(graph: Graph, dims: Optional[Dict[str, int]] = None, *,
     if backend == "jax":
         opts += (("jit", bool(jit)),)
     if backend == "pallas":
+        from repro.core import regions as REG
         from repro.core.codegen_pallas import resolve_interpret
         interpret = resolve_interpret(interpret)
-        opts += (("interpret", interpret),)
+        opts += (("interpret", interpret), ("jit", bool(jit)))
+        if not group:
+            opts += (("group", False),)
+        else:
+            # the VMEM budget shapes the grouping, so a plan cached
+            # under one budget must never serve another (its
+            # kernel_ids/launches would describe kernels that no
+            # longer exist)
+            opts += (("vmem_budget", REG.vmem_budget()),)
     if item_bytes:
         opts += (("item_bytes", tuple(sorted(item_bytes.items()))),)
     if dim_candidates is not None and autotune != "analytic":
@@ -330,6 +393,7 @@ def compile(graph: Graph, dims: Optional[Dict[str, int]] = None, *,
     plan, selected_graph = cache.get_plan(key)
     snaps: Optional[List[Graph]] = None
     pplan = None  # shared region partition (pallas cache-miss path)
+    gplan = None  # shared region grouping (costing + lowering)
     timings = None
     measure = None
     if plan is None:
@@ -345,7 +409,7 @@ def compile(graph: Graph, dims: Optional[Dict[str, int]] = None, *,
                     graph, dim_candidates, backend=backend, blocks=blocks,
                     interpret=interpret, jit=jit, item_bytes=item_bytes,
                     profile=profile, fused=fused, cache=cache,
-                    repeats=measure_repeats)
+                    repeats=measure_repeats, group=group)
                 sel = SEL.autotune(graph, dim_candidates, item_bytes,
                                    snapshots=snaps, objective="measured",
                                    profile=profile, measure=measure,
@@ -358,20 +422,27 @@ def compile(graph: Graph, dims: Optional[Dict[str, int]] = None, *,
             sel = SEL.select(graph, dims, item_bytes, snapshots=snaps,
                              profile=profile)
         selected_graph = snaps[sel.snapshot_index]
-        # per-region traffic attribution of the snapshot that will run
-        # (pallas partitions it into one kernel per region; the same
-        # plan is reused by the lowering below)
-        rcosts = None
-        if backend == "pallas":
+        # residency-aware per-kernel traffic attribution of the snapshot
+        # that will run (pallas packs its regions into megakernel
+        # groups; the same grouping is reused by the lowering below)
+        rcosts = kids = None
+        launches = resident = None
+        if backend == "pallas" and blocks is not None:
             pplan = _region_plan(selected_graph)
-            rcosts = (SEL.region_costs(selected_graph, sel.dims,
-                                       item_bytes, plan=pplan,
-                                       profile=profile)
-                      if pplan is not None else None)
+            gplan = _grouped_plan(pplan, sel.dims, blocks, group)
+            if gplan is not None:
+                rcosts = SEL.region_costs(selected_graph, sel.dims,
+                                          item_bytes, plan=gplan,
+                                          profile=profile)
+                kids = tuple(grp.gid for grp in gplan.groups)
+                launches = gplan.n_launches
+                resident = gplan.n_resident_edges
         plan = CachePlan(sel.snapshot_index, sel.dims, sel.cost,
                          sel.costs, SEL.snapshot_cost(graph, sel.dims,
                                                       item_bytes, profile),
-                         region_costs=rcosts, measured_s=sel.measured_s)
+                         region_costs=rcosts, measured_s=sel.measured_s,
+                         kernel_ids=kids, launches=launches,
+                         resident_edges=resident)
         cache.put_plan(key, plan, selected_graph)
         cache_hit = None
     else:
@@ -403,7 +474,33 @@ def compile(graph: Graph, dims: Optional[Dict[str, int]] = None, *,
         fn = _lower_jax(selected_graph, use_dims, jit)
     else:
         fn, report = _lower_pallas(selected_graph, use_dims, blocks,
-                                   interpret, program_plan=pplan)
+                                   interpret, program_plan=pplan,
+                                   grouped_plan=gplan, group=group,
+                                   jit=jit)
+
+    # emission may diverge from the planned grouping (a group the
+    # emitter cannot express degrades to per-region kernels): the
+    # per-kernel cost provenance must describe what actually runs, or
+    # costs would claim residency savings the fallback never realized
+    # and id-based time pairing would silently drop kernels
+    if backend == "pallas" and report is not None:
+        actual = getattr(getattr(fn, "raw_program", None),
+                         "emitted_kernels", None)
+        if (actual is not None and plan.kernel_ids is not None
+                and tuple(gid for gid, _ in actual) != plan.kernel_ids):
+            rcosts = []
+            for gid, unit in actual:
+                if hasattr(unit, "members"):  # a whole RegionGroup
+                    rcosts.append(SEL.group_cost(unit, use_dims,
+                                                 item_bytes, profile))
+                else:  # a single RegionSpec (degraded / singleton)
+                    rcosts.append(SEL.snapshot_cost(unit.graph, use_dims,
+                                                    item_bytes, profile))
+            plan = replace(plan, region_costs=tuple(rcosts),
+                           kernel_ids=tuple(g for g, _ in actual),
+                           launches=report.launches,
+                           resident_edges=report.resident_edges)
+            cache.put_plan(key, plan, selected_graph)
 
     in_info, out_info = _io_info(selected_graph)
     kern = CompiledKernel(
@@ -414,6 +511,7 @@ def compile(graph: Graph, dims: Optional[Dict[str, int]] = None, *,
         in_names=[n for n, _ in in_info],
         out_names=[n for n, _ in out_info], _fn=fn,
         lowering_report=report, region_costs=plan.region_costs,
+        kernel_ids=plan.kernel_ids,
         measured_s=plan.measured_s, autotune_timings=timings)
     cache.put_kernel(key, kern)
     return kern

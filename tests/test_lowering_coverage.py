@@ -102,10 +102,14 @@ def test_pipeline_lowers_selected_snapshot(name, rng):
     sel = SEL.select(g, dims)
     assert kern.snapshot_index == sel.snapshot_index
     assert kern.cost == sel.cost
-    # per-region traffic attribution matches the emitted region DAG
+    # per-kernel traffic attribution matches the emitted kernels (a
+    # region-group megakernel counts once), paired by kernel id
     assert kern.region_costs is not None
-    assert len(kern.region_costs) == rep.n_regions
+    assert len(kern.region_costs) == rep.launches
+    assert kern.kernel_ids is not None
+    assert len(kern.kernel_ids) == rep.launches
     assert all(c > 0 for c in kern.region_costs)
+    assert 1 <= rep.launches <= rep.n_regions
     out = kern(_merged_inputs(g, dims, blocks, rng))
     assert set(out) == {g.nodes[o].name for o in g.output_ids}
 

@@ -193,9 +193,10 @@ def test_pipeline_measured_autotune_pallas(tmp_path):
 
 
 def test_region_times_pair_with_region_costs(tmp_path):
-    """Per-kernel wall times align one-to-one with the per-region
-    traffic attribution — the (features, seconds) pairing calibration
-    fits."""
+    """Per-kernel wall times pair with the per-kernel traffic
+    attribution — by kernel id, not position — and a megakernel serving
+    several regions pairs once; the (features, seconds) pairing is what
+    calibration fits."""
     g = AP.rmsnorm_ffn_swiglu_program(16.0)
     dims = {"M": 2, "D": 2, "K": 3, "N": 2}
     blocks = {"M": 4, "D": 8, "K": 4, "N": 4}
@@ -207,8 +208,21 @@ def test_region_times_pair_with_region_costs(tmp_path):
     assert rts is not None
     assert kern.region_costs is not None
     assert len(rts) == len(kern.region_costs)
-    assert len(rts) == kern.lowering_report.n_regions
+    assert len(rts) == kern.lowering_report.launches
     assert all(r.median_s > 0 for r in rts)
+    assert all(r.gid for r in rts)
+    paired = T.pair_region_times(kern, rts)
+    assert len(paired) == len(rts)
+    assert [gid for gid, _, _ in paired] == list(kern.kernel_ids)
+    # id-based pairing survives reordering; positional pairing wouldn't
+    paired_rev = T.pair_region_times(kern, list(reversed(rts)))
+    assert sorted(paired) == sorted(paired_rev)
+    # the megakernel's wall time splits across its member regions
+    stages = T.stage_time_attribution(kern, rts)
+    assert len(stages) == kern.lowering_report.n_regions
+    for t in rts:
+        parts = [s for g_, _, s in stages if g_ == t.gid]
+        assert sum(parts) == pytest.approx(t.median_s)
     # non-pallas kernels don't expose region runners
     kj = pipeline.compile(g, dims, backend="jax", cache=cache)
     assert T.region_times(kj, inputs) is None
