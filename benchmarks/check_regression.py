@@ -14,6 +14,10 @@ run against the committed baseline and exits non-zero if
   * any pinned row's **kernel launch count** grows (``launches`` — the
     grouped megakernel schedule split apart, paying launches and HBM
     round-trips the baseline avoided),
+  * any pinned row's **calibrated region rank agreement**
+    (``region_spearman`` — predicted vs measured per-kernel times under
+    the fitted profile) drops more than 0.5 below the baseline (the
+    compute-aware cost model re-learned a rank inversion),
   * the **wall-clock fused-vs-unfused speedup** — the geometric mean of
     the per-row ratios — collapses by more than ``WALL_TOLERANCE``
     (1.5x) below the baseline's.  Generous on purpose: absolute wall
@@ -44,8 +48,10 @@ import sys
 
 TOLERANCE = 0.10  # fail when reduction drops >10% below baseline
 WALL_TOLERANCE = 1.5  # fail when speedup collapses >1.5x below baseline
+SPEARMAN_TOLERANCE = 0.5  # fail when region rank agreement drops by more
 GATED_KEYS = ("pred_traffic_reduction", "pallas_regions",
-              "pallas_fallbacks", "launches", "resident_edges", "speedup")
+              "pallas_fallbacks", "launches", "resident_edges", "speedup",
+              "region_spearman")
 
 
 def _parse_derived(derived: str) -> dict:
@@ -141,6 +147,21 @@ def main(argv) -> int:
             elif int(cur_l) < int(base_l) and verdict == "ok":
                 verdict = "improved (re-pin baseline?)"
                 improved.append(name)
+        # calibrated region rank agreement: the per-row Spearman of
+        # predicted vs measured per-kernel times must not collapse (a
+        # drop > SPEARMAN_TOLERANCE below the pin means the cost model
+        # re-learned a rank inversion the baseline had fixed); measured
+        # per-kernel seconds are noisy on shared runners, so only a
+        # large drop fails
+        base_sp, cur_sp = base.get("region_spearman"), cur.get(
+            "region_spearman")
+        if base_sp is not None and cur_sp is not None:
+            if float(cur_sp) < float(base_sp) - SPEARMAN_TOLERANCE:
+                verdict = "RANK INVERTED"
+                failures.append(
+                    f"{name}: region_spearman {float(cur_sp):.2f} < "
+                    f"{float(base_sp):.2f} - {SPEARMAN_TOLERANCE} "
+                    "(predicted-vs-measured region ranking collapsed)")
         print(f"{name:32s} {base_red:7.2f}x {cur_red:7.2f}x  {verdict}")
     # wall-clock gate: the same-machine fused/unfused speedup ratio,
     # aggregated (geometric mean) over every row both runs share so

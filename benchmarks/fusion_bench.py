@@ -52,12 +52,17 @@ EXAMPLES = {
 # derived values the regression gate compares (predicted traffic
 # reduction, pallas region/fallback counts) are deterministic
 CI_EXAMPLES = {
+    # L (the key-block grid dim of the softmax+PV region) is kept well
+    # above the other extents so the two attention regions' grid-cell
+    # counts are decisively asymmetric: at L == 2 their measured times
+    # tie within runner noise and the pinned region_spearman flips sign
+    # run-to-run
     "attention": (lambda: AP.attention_program(0.125),
-                  {"M": 2, "D": 2, "N": 4, "L": 2}),
+                  {"M": 2, "D": 2, "N": 4, "L": 8}),
     "causal_attention": (lambda: AP.causal_attention_program(0.125),
-                         {"M": 4, "D": 2, "N": 4, "L": 2}),
+                         {"M": 4, "D": 2, "N": 4, "L": 8}),
     "gqa_attention": (lambda: AP.gqa_attention_program(0.25, causal=True),
-                      {"H": 2, "M": 2, "D": 2, "N": 2, "L": 2}),
+                      {"H": 2, "M": 2, "D": 2, "N": 2, "L": 8}),
     "layernorm_matmul": (lambda: AP.layernorm_matmul_program(64.0),
                          {"M": 2, "K": 4, "N": 2}),
     "rmsnorm_ffn_swiglu": (lambda: AP.rmsnorm_ffn_swiglu_program(64.0),
@@ -158,42 +163,45 @@ def bench_pipeline_example(name: str, repeats: int = 5, bs: int = 16,
             "summary": rep.summary(),
         }
     extra = ""
+    # per-row rank agreement is computed AFTER the profile fit (the
+    # calibrated model is what selection/autotune actually rank with),
+    # so each row only collects its (features, seconds) pairs here;
+    # ``run_pipeline`` injects {group,region}_spearman post-fit
+    pairs: Dict[str, List] = {"group": [], "region": []}
     # kernels run in interpret mode off-TPU (hundreds of ms): a handful
     # of repeats is enough and keeps the bench under a minute
     t_reps = min(5, max(2, repeats // 2))
     gts = T.region_times(kp, inputs, warmup=1, repeats=t_reps)
     gpaired = T.pair_region_times(kp, gts or [])
     if gpaired:
-        sp = T.spearman([c for _, c, _ in gpaired],
-                        [s for _, _, s in gpaired])
-        extra += (f"group_spearman={sp:.2f};kernel_times_us="
+        extra += ("kernel_times_us="
                   + "/".join(f"{s * 1e6:.0f}" for _, _, s in gpaired)
                   + ";")
-        gfeats = dict(CAL.group_features(kp.graph, dims, blocks) or ())
+        gfp = T.pair_region_features(
+            gts or [], CAL.group_features(kp.graph, dims, blocks) or ())
+        pairs["group"] = [(f, s) for _, f, s in gfp]
         if samples is not None:
-            for gid, c, s in gpaired:
-                if gid in gfeats:
-                    samples.append({"program": name, "kernel": gid,
-                                    "features": gfeats[gid],
-                                    "seconds": s, "pred_cost": c})
+            for gid, f, s in gfp:
+                samples.append({"program": name, "kernel": gid,
+                                "features": f, "seconds": s})
     rts = T.region_times(kpr, inputs, warmup=1, repeats=t_reps)
     rpaired = T.pair_region_times(kpr, rts or [])
     feats = CAL.region_features(kpr.graph, dims)
     if rpaired:
-        sp = T.spearman([c for _, c, _ in rpaired],
-                        [s for _, _, s in rpaired])
-        extra += (f"region_spearman={sp:.2f};region_times_us="
+        extra += ("region_times_us="
                   + "/".join(f"{s * 1e6:.0f}" for _, _, s in rpaired)
                   + ";")
-        if (samples is not None and feats
-                and len(feats) == len(rpaired)):
-            for f, (gid, c, s) in zip(feats, rpaired):
-                samples.append({"program": name, "kernel": gid,
-                                "features": f, "seconds": s,
-                                "pred_cost": c})
+        if feats and len(feats) == len(rpaired):
+            pairs["region"] = [(f, s) for f, (_, _, s)
+                               in zip(feats, rpaired)]
+            if samples is not None:
+                for f, (gid, _, s) in zip(feats, rpaired):
+                    samples.append({"program": name, "kernel": gid,
+                                    "features": f, "seconds": s})
     return [{
         "name": f"pipeline_{name}",
         "us_per_call": fused_us,
+        "_pairs": pairs,
         "derived": (
             f"unfused_us={unfused_us:.1f};"
             f"speedup={unfused_us / max(fused_us, 1e-9):.2f}x;"
@@ -218,7 +226,8 @@ def _calibration_row(samples: List[Dict],
     region sample, persist it (cache dir + optional explicit path), and
     summarize the fit — including the pooled predicted-vs-measured rank
     agreement of the *calibrated* model, the calibration acceptance
-    metric."""
+    metric.  Returns ``(summary row, fitted profile)`` so the caller
+    can score per-row rank agreement under the same profile."""
     import json
 
     from repro.core import calibrate as CAL
@@ -237,21 +246,27 @@ def _calibration_row(samples: List[Dict],
             json.dump(prof.to_json(), f, indent=2)
     coefs = ";".join(f"{k}_coef={prof.item_coef[k]:.3g}"
                      for k in sorted(prof.item_coef))
-    return {
+    work = ";".join(f"work_{k}_coef={prof.work_coef[k]:.3g}"
+                    for k in sorted(prof.work_coef))
+    row = {
         "name": "calibration_profile",
         "us_per_call": float(np.median(meas)) * 1e6,
         "derived": (
             f"backend={prof.backend};device={dev};"
             f"n_samples={prof.n_samples};residual={prof.residual:.3f};"
-            f"pooled_spearman={pooled:.2f};{coefs};"
+            f"pooled_spearman={pooled:.2f};{coefs};{work};"
             f"launch_coef={prof.launch_coef:.3g};saved={path}"
         ),
     }
+    return row, prof
 
 
 def run_pipeline(preset: str = "full",
                  profile_out: Optional[str] = None,
                  lowering_out: Optional[str] = None) -> List[Dict]:
+    from repro.core import calibrate as CAL
+    from repro.core import timing as T
+
     examples, repeats, bs = PRESETS[preset]
     rows: List[Dict] = []
     samples: List[Dict] = []
@@ -261,8 +276,24 @@ def run_pipeline(preset: str = "full",
                                            examples=examples,
                                            samples=samples,
                                            lowering_reports=reports))
+    prof = CAL.DEFAULT_PROFILE
     if samples:
-        rows.append(_calibration_row(samples, profile_out))
+        cal_row, prof = _calibration_row(samples, profile_out)
+    # per-row rank agreement under the CALIBRATED model (the one the
+    # measured autotune path actually ranks with): predicted cost of
+    # each kernel's feature row vs its measured seconds
+    for row in rows:
+        pairs = row.pop("_pairs", None)
+        if not pairs:
+            continue
+        for kind in ("group", "region"):
+            ps = pairs.get(kind) or []
+            if ps:
+                sp = T.spearman([prof.predict(f) for f, _ in ps],
+                                [s for _, s in ps])
+                row["derived"] += f";{kind}_spearman={sp:.2f}"
+    if samples:
+        rows.append(cal_row)
     if lowering_out:
         import json
         with open(lowering_out, "w") as f:

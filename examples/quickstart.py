@@ -212,3 +212,52 @@ ukern = pipeline.compile(swiglu, sdims, backend="pallas", blocks=sblocks,
                          group=False)
 print(f"  ungrouped for comparison: {ukern.lowering_report.launches} "
       "launches")
+
+# 10. the compute-aware calibration profile: selection's cost model is
+#     a CalibrationProfile — per-item-kind traffic coefficients plus,
+#     since schema 2, per-op-class WORK coefficients (matmul /
+#     elementwise / reduce FLOPs at the representative block extent), a
+#     per-grid-cell instance coefficient, and per-dtype item scales
+#     (bf16 blocks move half the bytes of f32, int8/fp8 a quarter).
+#     The DEFAULT profile keeps every new coefficient at zero, so it
+#     prices exactly the paper's bytes+launches objective —
+#     bit-identical to the pre-compute-aware model.  A measured fit
+#     (benchmarks/run.py --only pipeline fits one from per-kernel wall
+#     times) turns the new terms on; with group=True (the pallas
+#     default) selection then ranks snapshots by the SUM of grouped,
+#     residency-aware kernel costs — the cost of what actually runs.
+from dataclasses import replace
+
+from repro.core import calibrate as CAL
+from repro.core import selection as SEL
+
+t_fused = C.traffic(snapshots[-1], dims)
+base_cost = SEL.snapshot_cost(snapshots[-1], dims)
+assert base_cost == (t_fused.bytes_moved(CAL.DEFAULT_ITEM_BYTES)
+                     + CAL.KERNEL_LAUNCH_COST * t_fused.launches)
+# units are arbitrary (selection only ranks): these price one matmul
+# FLOP at ~1/100 the cost of moving one byte
+compute_aware = replace(
+    CAL.DEFAULT_PROFILE,
+    work_coef={"matmul": 1e-2, "elementwise": 1e-3, "reduce": 1e-3},
+    instance_coef=1e3)
+print()
+print("compute-aware profile (schema %d):" % CAL.PROFILE_SCHEMA)
+print(f"  flops per class  : "
+      + ", ".join(f"{k}={v:.3g}" for k, v in t_fused.flops().items()))
+print(f"  traffic-only cost: {base_cost:.4g}")
+print(f"  +work/instances  : "
+      f"{SEL.snapshot_cost(snapshots[-1], dims, profile=compute_aware):.4g}")
+print(f"  bf16 item coefs  : scaled x"
+      f"{compute_aware.dtype_scale['bf16']} via item_coef_for('bf16')")
+# grouped vs global objective on the same snapshot (what select ranks
+# by under group=True):
+print(f"  objective: global {SEL.objective_cost(snapshots[-1], dims):.4g}"
+      f" vs grouped "
+      f"{SEL.objective_cost(snapshots[-1], dims, group=True):.4g}")
+# re-fit + re-pin loop: PYTHONPATH=src:. python benchmarks/run.py
+#   --only pipeline --preset ci --json BENCH_ci.json   (fits + saves a
+#   profile under the kernel cache; writes per-row region_spearman)
+# then python benchmarks/check_regression.py --pin BENCH_ci.json \
+#   benchmarks/baseline.json pins the gated keys, including the rank
+#   agreement the compute-aware features bought.

@@ -45,7 +45,10 @@ from repro.core.graph import Graph
 # program's traffic are appended to the fit on the fly
 ITEM_KINDS = ("block", "vector", "scalar")
 
-PROFILE_SCHEMA = 1
+# schema 2 adds per-op-class work coefficients and per-dtype item-coef
+# scales; schema-1 files (pre-work-feature) are repaired on load with
+# zero work coefficients and a warning
+PROFILE_SCHEMA = 2
 
 # the historical magic constants (representative 128x128 f32 blocks and a
 # bytes-equivalent launch overhead).  These are the *definition* of the
@@ -54,6 +57,20 @@ PROFILE_SCHEMA = 1
 DEFAULT_ITEM_BYTES: Dict[str, float] = {"block": 128 * 128 * 4,
                                         "vector": 128 * 4, "scalar": 4}
 KERNEL_LAUNCH_COST = 1e5
+
+# compute term: one coefficient per ``cost.WORK_CLASSES`` class, priced
+# per estimated FLOP (``Traffic.flops``).  Zero by default so the default
+# profile reproduces the paper's traffic-only objective bit-identically.
+WORK_CLASSES = C.WORK_CLASSES
+DEFAULT_WORK_COEF: Dict[str, float] = {c: 0.0 for c in WORK_CLASSES}
+WORK_FEATURES = tuple("work_" + c for c in WORK_CLASSES)
+
+# per-dtype scale on the item coefficients: a bf16 block moves half the
+# bytes of the f32 block the default coefficients price, int8/fp8 a
+# quarter.  f32 is the identity so untouched call sites are unchanged.
+DEFAULT_DTYPE_SCALE: Dict[str, float] = {"f32": 1.0, "bf16": 0.5,
+                                         "f16": 0.5, "int8": 0.25,
+                                         "fp8": 0.25}
 
 
 @dataclass(frozen=True)
@@ -73,24 +90,69 @@ class CalibrationProfile:
     source: str = "default"       # "default" | "measured" | "item_bytes"
     n_samples: int = 0
     residual: float = 0.0         # rms relative residual of the fit
+    work_coef: Mapping[str, float] = field(
+        default_factory=lambda: dict(DEFAULT_WORK_COEF))
+    dtype_scale: Mapping[str, float] = field(
+        default_factory=lambda: dict(DEFAULT_DTYPE_SCALE))
+    # per-grid-cell dispatch overhead (kernel program instances); zero
+    # in the default profile so the historical formula is untouched
+    instance_coef: float = 0.0
 
-    def cost(self, t: C.Traffic) -> float:
-        return (t.bytes_moved(self.item_coef)
+    def item_coef_for(self, dtype: Optional[str] = None
+                      ) -> Mapping[str, float]:
+        """Item coefficients scaled for ``dtype`` (f32/None: identity —
+        the same mapping object, so the default path is unchanged)."""
+        if dtype is None or dtype == "f32":
+            return self.item_coef
+        s = float(self.dtype_scale.get(dtype, 1.0))
+        return {k: v * s for k, v in self.item_coef.items()}
+
+    def work_cost(self, t: C.Traffic) -> float:
+        """The compute + per-instance term: work coefficients dotted
+        with the per-class FLOP features, plus the grid-cell dispatch
+        overhead.  Zero for the default profile."""
+        tot = self.instance_coef * t.instances
+        if any(self.work_coef.values()):
+            fl = t.flops()
+            tot += sum(self.work_coef.get(c, 0.0) * v
+                       for c, v in fl.items())
+        return tot
+
+    def cost(self, t: C.Traffic, dtype: Optional[str] = None) -> float:
+        base = (t.bytes_moved(self.item_coef_for(dtype))
                 + self.launch_coef * t.launches)
+        w = self.work_cost(t)
+        # skip the add when the compute term is zero so the default
+        # (all-zero work_coef) profile stays bit-identical to the
+        # pre-work-feature formula
+        return base + w if w else base
 
     def predict(self, features: Mapping[str, float]) -> float:
         """Cost of a :func:`traffic_features` row — identical to
-        :meth:`cost` on the traffic it was derived from."""
-        return (sum(self.item_coef.get(k, 0.0) * v
-                    for k, v in features.items() if k != "launches")
-                + self.launch_coef * features.get("launches", 0.0))
+        :meth:`cost` on the traffic it was derived from.  ``work_*``
+        keys are priced by ``work_coef``, ``instances`` by
+        ``instance_coef``, everything but ``launches`` by
+        ``item_coef``."""
+        tot = self.launch_coef * features.get("launches", 0.0)
+        tot += self.instance_coef * features.get("instances", 0.0)
+        for k, v in features.items():
+            if k in ("launches", "instances"):
+                continue
+            if k.startswith("work_"):
+                tot += self.work_coef.get(k[len("work_"):], 0.0) * v
+            else:
+                tot += self.item_coef.get(k, 0.0) * v
+        return tot
 
     def digest(self) -> str:
         """Short stable hash — cache keys embed it so a kernel selected
         under one profile is never served for another."""
         import hashlib
         raw = json.dumps([sorted(self.item_coef.items()),
-                          self.launch_coef])
+                          self.launch_coef,
+                          sorted(self.work_coef.items()),
+                          sorted(self.dtype_scale.items()),
+                          self.instance_coef])
         return hashlib.sha256(raw.encode()).hexdigest()[:12]
 
     def to_json(self) -> Dict:
@@ -101,22 +163,69 @@ class CalibrationProfile:
                 "device_kind": self.device_kind,
                 "source": self.source,
                 "n_samples": self.n_samples,
-                "residual": self.residual}
+                "residual": self.residual,
+                "work_coef": dict(self.work_coef),
+                "dtype_scale": dict(self.dtype_scale),
+                "instance_coef": self.instance_coef}
 
     @classmethod
     def from_json(cls, d: Dict) -> "CalibrationProfile":
-        if d.get("schema") != PROFILE_SCHEMA:
+        schema = d.get("schema")
+        if schema not in (1, PROFILE_SCHEMA):
             raise ValueError(f"calibration profile schema "
-                             f"{d.get('schema')!r} != {PROFILE_SCHEMA}")
+                             f"{schema!r} != {PROFILE_SCHEMA}")
         coef = {str(k): float(v) for k, v in d["item_coef"].items()}
         if not coef or any(v < 0 for v in coef.values()):
             raise ValueError("calibration profile has no/negative "
                              "item coefficients")
+        raw_work = d.get("work_coef")
+        if schema == 1:
+            # stale pre-work-feature profile: its traffic coefficients
+            # are still good, so repair rather than discard — the work
+            # coefficients take the (scaled) default, which is zero for
+            # every class regardless of the fitted unit system
+            warnings.warn(
+                "calibration profile uses stale schema 1 "
+                f"(current {PROFILE_SCHEMA}); loading with default "
+                "work coefficients — re-run calibration to refit",
+                RuntimeWarning, stacklevel=2)
+            raw_work = None
+        if raw_work is None:
+            work = dict(DEFAULT_WORK_COEF)
+        else:
+            work = {str(k): float(v) for k, v in raw_work.items()}
+            if any(v < 0 for v in work.values()):
+                raise ValueError("calibration profile has negative "
+                                 "work coefficients")
+            if set(work) != set(WORK_CLASSES):
+                # wrong-length coefficient vector for this schema:
+                # repair to the known classes instead of misfitting
+                warnings.warn(
+                    "calibration profile work-coefficient vector "
+                    f"{sorted(work)} != {sorted(WORK_CLASSES)}; "
+                    "repairing with defaults for missing classes",
+                    RuntimeWarning, stacklevel=2)
+                work = {c: work.get(c, DEFAULT_WORK_COEF[c])
+                        for c in WORK_CLASSES}
+        raw_scale = d.get("dtype_scale")
+        if raw_scale is None:
+            scale = dict(DEFAULT_DTYPE_SCALE)
+        else:
+            scale = {str(k): float(v) for k, v in raw_scale.items()}
+            if any(v <= 0 for v in scale.values()):
+                raise ValueError("calibration profile has non-positive "
+                                 "dtype scales")
+        inst = float(d.get("instance_coef", 0.0))
+        if inst < 0:
+            raise ValueError("calibration profile has a negative "
+                             "instance coefficient")
         return cls(coef, float(d["launch_coef"]), str(d.get("backend",
                    "any")), str(d.get("device_kind", "any")),
                    str(d.get("source", "measured")),
                    int(d.get("n_samples", 0)),
-                   float(d.get("residual", 0.0)))
+                   float(d.get("residual", 0.0)),
+                   work_coef=work, dtype_scale=scale,
+                   instance_coef=inst)
 
 
 DEFAULT_PROFILE = CalibrationProfile(dict(DEFAULT_ITEM_BYTES),
@@ -152,17 +261,29 @@ def region_features(g: Graph, dims: Dict[str, int]
     *ungrouped* ``selection.region_costs`` / per-region lowering order
     (the partition is deterministic).  ``None`` when the program cannot
     be partitioned."""
+    from math import prod
+
     from repro.core import regions as R
     try:
         plan = R.plan_program(g)
     except R.RegionError:
         return None
-    return [traffic_features(spec.graph, dims) for spec in plan.regions]
+    rows = []
+    for spec in plan.regions:
+        f = traffic_features(spec.graph, dims)
+        # the region kernel's grid cells — whole-program traffic can't
+        # know the grid, but the region plan does
+        f["instances"] = float(prod(dims[d] for d in spec.grid_dims))
+        rows.append(f)
+    return rows
 
 
 def _traffic_to_features(t: C.Traffic) -> Dict[str, float]:
     f = {k: float(t.loads.get(k, 0) + t.stores.get(k, 0))
          for k in set(ITEM_KINDS) | set(t.loads) | set(t.stores)}
+    for cls, v in t.flops().items():
+        f["work_" + cls] = float(v)
+    f["instances"] = float(t.instances)
     f["launches"] = float(t.launches)
     return f
 
@@ -204,40 +325,76 @@ def fit_profile(feature_rows: Sequence[Mapping[str, float]],
     cannot use — keep the default profile's coefficient rescaled into
     the fitted unit system, so the profile stays a total cost model for
     programs that move kinds the calibration run never exercised.
+
+    ``work_*`` feature columns (per-op-class FLOPs) fit the compute
+    term: their coefficients are clamped non-negative — a column whose
+    joint fit comes out negative is dropped and the remaining columns
+    refitted, so a bandwidth-bound sample set degrades to the pure
+    traffic model instead of producing a work *discount*.
     """
     if len(feature_rows) != len(times_s) or not feature_rows:
         raise ValueError("need equally many feature rows and times")
     kinds = list(ITEM_KINDS)
     for row in feature_rows:
         for k in row:
-            if k != "launches" and k not in kinds:
+            if (k not in ("launches", "instances")
+                    and not k.startswith("work_") and k not in kinds):
                 kinds.append(k)
-    cols = kinds + ["launches"]
+    work_cols = ["work_" + c for c in WORK_CLASSES]
+    cols = kinds + work_cols + ["instances", "launches"]
     A = np.array([[float(row.get(c, 0.0)) for c in cols]
                   for row in feature_rows], dtype=np.float64)
     b = np.asarray(times_s, dtype=np.float64)
-    coef, *_ = np.linalg.lstsq(A, b, rcond=None)
 
-    base_vec = np.array([base.item_coef.get(c, base.item_coef.get(
-        "scalar", 1.0)) for c in kinds] + [base.launch_coef])
+    # iterative non-negative clamp on the zero-default columns (work
+    # classes + instances): refit without the most negative clamped
+    # coefficient until none are negative — these columns have no
+    # scaled-default fallback to rescue a nonsense sign
+    n_work = len(work_cols)
+    clampable = np.zeros(len(cols), dtype=bool)
+    clampable[len(kinds):len(kinds) + n_work + 1] = True
+    active = np.ones(len(cols), dtype=bool)
+    while True:
+        coef = np.zeros(len(cols))
+        sub, *_ = np.linalg.lstsq(A[:, active], b, rcond=None)
+        coef[active] = sub
+        bad = clampable & active & (coef < 0)
+        if not bad.any():
+            break
+        worst = int(np.argmin(np.where(bad, coef, 0.0)))
+        active[worst] = False
+
+    base_vec = np.array(
+        [base.item_coef.get(c, base.item_coef.get("scalar", 1.0))
+         for c in kinds]
+        + [base.work_coef.get(c, 0.0) for c in WORK_CLASSES]
+        + [base.instance_coef, base.launch_coef])
     observed = A.any(axis=0)
-    good = observed & (coef > 0)
+    good = observed & active & (coef > 0)
     if not good.any():
         warnings.warn("calibration fit produced no positive "
                       "coefficients; keeping the default profile",
                       RuntimeWarning, stacklevel=2)
         return replace(base, backend=backend, device_kind=device_kind)
     # unit bridge: how many fitted units one default unit is worth,
-    # taken as the median over the trustworthy coefficients
-    unit = float(np.median(coef[good] / base_vec[good]))
+    # taken as the median over the trustworthy coefficients with a
+    # nonzero default (work classes default to 0 and cannot bridge)
+    bridge = good & (base_vec > 0)
+    unit = (float(np.median(coef[bridge] / base_vec[bridge]))
+            if bridge.any() else 1.0)
     fitted = np.where(good, coef, base_vec * unit)
     pred = A @ fitted
     denom = float(np.sqrt(np.mean(b ** 2))) or 1.0
     residual = float(np.sqrt(np.mean((pred - b) ** 2))) / denom
     return CalibrationProfile(
-        {k: float(v) for k, v in zip(kinds, fitted[:-1])},
+        {k: float(v) for k, v in zip(kinds, fitted[:len(kinds)])},
         float(fitted[-1]), backend=backend, device_kind=device_kind,
-        source="measured", n_samples=len(times_s), residual=residual)
+        source="measured", n_samples=len(times_s), residual=residual,
+        work_coef={c: float(v) for c, v in
+                   zip(WORK_CLASSES,
+                       fitted[len(kinds):len(kinds) + n_work])},
+        dtype_scale=dict(base.dtype_scale),
+        instance_coef=float(fitted[len(kinds) + n_work]))
 
 
 # ---------------------------------------------------------------------------

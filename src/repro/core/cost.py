@@ -46,12 +46,47 @@ from repro.core.graph import (FuncNode, Graph, InputNode, MapNode, MiscNode,
                               OutputNode, ReduceNode, VType)
 
 
+# --- per-op-class work (FLOP) features --------------------------------------
+# ``Traffic.work`` counts op *applications* by op name (already weighted
+# by loop trip counts).  For the compute term of the cost model each op
+# name maps to a class whose per-application FLOP weight is taken at the
+# same representative block extent as DEFAULT_ITEM_BYTES (128x128 f32
+# blocks): a block matmul is O(e^3), everything else touches each item
+# element once, O(e^2).  Ranking only needs the relative weights.
+
+WORK_CLASSES = ("matmul", "elementwise", "reduce")
+MATMUL_OPS = frozenset({"dot", "outer"})
+REDUCE_OPS = frozenset({"row_sum", "reduce_add"})
+REPR_BLOCK_EXTENT = 128
+
+
+def op_class(name: str) -> str:
+    """The work class of one functional operator name."""
+    if name in MATMUL_OPS:
+        return "matmul"
+    if name in REDUCE_OPS:
+        return "reduce"
+    return "elementwise"
+
+
+def flop_weights(extent: int = REPR_BLOCK_EXTENT) -> Dict[str, float]:
+    """FLOPs of one op application on ``extent``-sized square blocks."""
+    return {"matmul": 2.0 * extent ** 3,
+            "elementwise": float(extent ** 2),
+            "reduce": float(extent ** 2)}
+
+
 @dataclass
 class Traffic:
     loads: Counter = field(default_factory=Counter)    # item kind -> count
     stores: Counter = field(default_factory=Counter)
     work: Counter = field(default_factory=Counter)     # op name -> count
     launches: int = 0
+    # kernel grid cells per launch (program instances): each cell pays
+    # dispatch/prologue overhead on top of its loads/stores/FLOPs.  Only
+    # region-level accounting knows the grid (``group_traffic`` fills it
+    # from the group's grid dims); whole-program traffic leaves it 0.
+    instances: float = 0.0
 
     def total_items(self) -> int:
         return sum(self.loads.values()) + sum(self.stores.values())
@@ -59,6 +94,18 @@ class Traffic:
     def bytes_moved(self, item_bytes: Dict[str, int]) -> int:
         return (sum(item_bytes.get(k, 0) * v for k, v in self.loads.items())
                 + sum(item_bytes.get(k, 0) * v for k, v in self.stores.items()))
+
+    def flops(self, extent: int = REPR_BLOCK_EXTENT) -> Dict[str, float]:
+        """Estimated FLOPs per work class: op applications weighted by
+        the per-class FLOP count at ``extent``-sized blocks.  Every
+        class is always present (zero when the program does no such
+        work), so feature vectors have a stable column set."""
+        w = flop_weights(extent)
+        out = {c: 0.0 for c in WORK_CLASSES}
+        for name, n in self.work.items():
+            cls = op_class(name)
+            out[cls] += w[cls] * n
+        return out
 
 
 def _causal_trips(q_count: int, k_count: int) -> float:
@@ -230,6 +277,7 @@ def group_traffic(group, sizes: Dict[str, int]) -> Traffic:
         total.stores.update(t.stores)
         total.work.update(t.work)
     total.launches = 1
+    total.instances = float(prod(sizes[d] for d in group.grid_dims))
     return total
 
 

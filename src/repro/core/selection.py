@@ -112,14 +112,77 @@ def region_costs(g: Graph, dims: Dict[str, int],
                  for spec in plan.regions)
 
 
+def objective_cost(g: Graph, dims: Dict[str, int],
+                   item_bytes: Optional[Dict[str, int]] = None,
+                   profile: Optional[CAL.CalibrationProfile] = None, *,
+                   group: bool = False,
+                   blocks: Optional[Dict[str, int]] = None,
+                   plan=None,
+                   vmem_budget: Optional[int] = None) -> float:
+    """The selection objective for one snapshot at fixed dims.
+
+    ``group=False`` (the paper's objective): whole-program traffic with
+    every edge charged against global memory — :func:`snapshot_cost`.
+    ``group=True`` (the residency-aware objective): ``sum(group_cost)``
+    over the deterministic grouped region partition the Pallas backend
+    actually emits — resident cross-region edges are free and each
+    group costs one launch, so snapshots are ranked by the cost of what
+    runs, not the paper's all-edges-global upper bound.  A program the
+    partitioner cannot split falls back to :func:`snapshot_cost`
+    (whole-program lowering: the two objectives coincide).
+
+    ``plan`` optionally passes a precomputed ``regions.ProgramPlan``
+    for ``g`` (the partition is dims-independent, so sweeps reuse it).
+    """
+    if not group:
+        return snapshot_cost(g, dims, item_bytes, profile)
+    from repro.core import regions as R
+    if plan is None:
+        try:
+            plan = R.plan_program(g)
+        except R.RegionError:
+            return snapshot_cost(g, dims, item_bytes, profile)
+    gp = R.group_plan(plan, dims, blocks, budget_bytes=vmem_budget)
+    return sum(group_cost(grp, dims, item_bytes, profile)
+               for grp in gp.groups)
+
+
 def select(g: Graph, dims: Dict[str, int],
            item_bytes: Optional[Dict[str, int]] = None,
            snapshots: Optional[List[Graph]] = None,
-           profile: Optional[CAL.CalibrationProfile] = None) -> Selected:
-    """Fuse (if needed) and pick the cheapest snapshot for fixed dims."""
+           profile: Optional[CAL.CalibrationProfile] = None, *,
+           group: bool = False,
+           blocks: Optional[Dict[str, int]] = None,
+           vmem_budget: Optional[int] = None,
+           _plans: Optional[List] = None) -> Selected:
+    """Fuse (if needed) and pick the cheapest snapshot for fixed dims.
+
+    ``group=True`` ranks by the grouped, residency-aware objective (see
+    :func:`objective_cost`) — what the Pallas region-group lowering will
+    actually pay.  ``_plans`` (internal) carries per-snapshot region
+    plans across ``autotune``'s dims sweep so each snapshot is
+    partitioned once, not once per assignment."""
     snaps = snapshots if snapshots is not None else fuse(g)
-    costs = tuple(snapshot_cost(s, dims, item_bytes, profile)
-                  for s in snaps)
+    plans: Optional[List] = None
+    if group:
+        from repro.core import regions as R
+        if _plans is not None and len(_plans) == len(snaps):
+            plans = _plans
+        else:
+            plans = []
+            for s in snaps:
+                try:
+                    plans.append(R.plan_program(s))
+                except R.RegionError:
+                    plans.append(None)
+            if _plans is not None:
+                _plans[:] = plans
+    costs = tuple(
+        objective_cost(s, dims, item_bytes, profile, group=group,
+                       blocks=blocks, vmem_budget=vmem_budget,
+                       plan=plans[j] if plans is not None else None)
+        if group else snapshot_cost(s, dims, item_bytes, profile)
+        for j, s in enumerate(snaps))
     i = min(range(len(costs)), key=costs.__getitem__)
     return Selected(i, snaps[i], dict(dims), costs[i], costs)
 
@@ -151,7 +214,10 @@ def autotune(g: Graph, dim_candidates: Dict[str, Sequence[int]],
              objective: str = "analytic",
              profile: Optional[CAL.CalibrationProfile] = None,
              measure: Optional[Callable[[Selected], float]] = None,
-             top_k: int = 3) -> Selected:
+             top_k: int = 3,
+             group: bool = False,
+             blocks: Optional[Dict[str, int]] = None,
+             vmem_budget: Optional[int] = None) -> Selected:
     """Sweep block-count assignments (the paper's block-shape choice) and
     return the globally cheapest (dims, snapshot).  The fusion algorithm
     is invoked ONCE — its choices don't depend on block shapes (paper
@@ -178,9 +244,12 @@ def autotune(g: Graph, dim_candidates: Dict[str, Sequence[int]],
             "pipeline.compile(..., autotune='measured'), which builds it")
     snaps = snapshots if snapshots is not None else fuse(g)
     cands: List[Selected] = []
+    shared_plans: List = []  # per-snapshot region plans, computed once
     for dims in sweep_assignments(dim_candidates):
         cands.append(select(g, dims, item_bytes, snapshots=snaps,
-                            profile=profile))
+                            profile=profile, group=group, blocks=blocks,
+                            vmem_budget=vmem_budget,
+                            _plans=shared_plans if group else None))
     if not cands:
         raise ValueError("empty dim_candidates sweep")
     # stable: equal analytic costs keep sweep order, so the analytic

@@ -200,6 +200,23 @@ def pair_region_times(kern, times: Sequence[RegionTime]
     return out
 
 
+def pair_region_features(times: Sequence[RegionTime],
+                         features: Sequence[Tuple[str, Dict[str, float]]]
+                         ) -> List[Tuple[str, Dict[str, float], float]]:
+    """Id-based pairing of measured kernel times with per-kernel
+    *feature rows* (``calibrate.group_features`` output — item counts,
+    per-class ``work_*`` FLOPs, launches): ``(gid, features, seconds)``
+    for every kernel present in both.  These pairs are what
+    ``calibrate.fit_profile`` consumes, so the fit regresses against
+    the full schema-2 feature vector, not just the scalar cost."""
+    feat_of = {gid: f for gid, f in features}
+    out = []
+    for t in times:
+        if t.gid in feat_of:
+            out.append((t.gid, feat_of[t.gid], t.median_s))
+    return out
+
+
 def stage_time_attribution(kern, times: Sequence[RegionTime]
                            ) -> List[Tuple[str, str, float]]:
     """Attribute each measured kernel time to the *regions* it serves:

@@ -47,7 +47,10 @@ _SCHEMA_VERSION = 3  # v3: per-kernel ids + launch/residency provenance
 # build would never emit).  v4: region-group megakernels (compatible
 # regions share one pallas_call with VMEM-resident cross-region values;
 # per-kernel costs are residency-aware and paired by kernel id).
-CODEGEN_VERSION = 4
+# v5: compute-aware grouped selection (pallas snapshots rank by
+# sum-of-group-costs under a schema-2 calibration profile with work
+# coefficients; old plans may carry a differently-selected snapshot).
+CODEGEN_VERSION = 5
 
 DEFAULT_MAX_DISK_BYTES = 1 << 30  # 1 GiB
 

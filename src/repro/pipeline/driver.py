@@ -321,7 +321,11 @@ def compile(graph: Graph, dims: Optional[Dict[str, int]] = None, *,
     share one multi-stage ``pallas_call`` with cross-region values held
     in VMEM (``regions.group_plan``, gated by the
     ``$REPRO_VMEM_BUDGET_BYTES`` budget); ``group=False`` keeps the
-    one-kernel-per-region lowering.
+    one-kernel-per-region lowering.  When grouping is on, snapshot
+    selection also ranks by the grouped residency-aware objective
+    (``selection.objective_cost(group=True)`` — resident edges free,
+    one launch per group) instead of the paper's all-edges-global sum,
+    so what is picked is what is cheapest to actually run.
 
     ``autotune="measured"`` (with ``dim_candidates``) closes the
     predict -> run -> measure loop: the calibrated analytic model prunes
@@ -396,6 +400,11 @@ def compile(graph: Graph, dims: Optional[Dict[str, int]] = None, *,
     gplan = None  # shared region grouping (costing + lowering)
     timings = None
     measure = None
+    # the pallas grouped lowering runs the grouped megakernel schedule,
+    # so its snapshots are ranked by the residency-aware grouped
+    # objective (sum of group costs); every other backend runs the
+    # whole program as one unit and keeps the paper's global objective
+    sel_group = bool(group) and backend == "pallas"
     if plan is None:
         # -- the full pipeline: fuse -> select/autotune --------------------
         if fused:
@@ -413,14 +422,17 @@ def compile(graph: Graph, dims: Optional[Dict[str, int]] = None, *,
                 sel = SEL.autotune(graph, dim_candidates, item_bytes,
                                    snapshots=snaps, objective="measured",
                                    profile=profile, measure=measure,
-                                   top_k=top_k)
+                                   top_k=top_k, group=sel_group,
+                                   blocks=blocks)
                 timings = sel.timings
             else:
                 sel = SEL.autotune(graph, dim_candidates, item_bytes,
-                                   snapshots=snaps, profile=profile)
+                                   snapshots=snaps, profile=profile,
+                                   group=sel_group, blocks=blocks)
         else:
             sel = SEL.select(graph, dims, item_bytes, snapshots=snaps,
-                             profile=profile)
+                             profile=profile, group=sel_group,
+                             blocks=blocks)
         selected_graph = snaps[sel.snapshot_index]
         # residency-aware per-kernel traffic attribution of the snapshot
         # that will run (pallas packs its regions into megakernel
@@ -437,9 +449,13 @@ def compile(graph: Graph, dims: Optional[Dict[str, int]] = None, *,
                 kids = tuple(grp.gid for grp in gplan.groups)
                 launches = gplan.n_launches
                 resident = gplan.n_resident_edges
+        # the unfused program priced under the SAME objective as the
+        # winner, so predicted_traffic_reduction compares like with like
+        init_cost = SEL.objective_cost(graph, sel.dims, item_bytes,
+                                       profile, group=sel_group,
+                                       blocks=blocks)
         plan = CachePlan(sel.snapshot_index, sel.dims, sel.cost,
-                         sel.costs, SEL.snapshot_cost(graph, sel.dims,
-                                                      item_bytes, profile),
+                         sel.costs, init_cost,
                          region_costs=rcosts, measured_s=sel.measured_s,
                          kernel_ids=kids, launches=launches,
                          resident_edges=resident)

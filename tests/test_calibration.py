@@ -198,6 +198,185 @@ def test_stale_or_corrupt_profile_warns_and_falls_back(tmp_path, payload):
 
 
 # ---------------------------------------------------------------------------
+# Schema migration: stale and malformed coefficient vectors
+# ---------------------------------------------------------------------------
+
+def test_schema1_profile_loads_with_default_work(tmp_path):
+    """A persisted pre-work-feature (schema 1) profile is repaired on
+    load — its traffic coefficients survive, the work coefficients take
+    the default (zero) — instead of being discarded."""
+    payload = {"schema": 1, "backend": "pallas", "device_kind": "dev",
+               "item_coef": {"block": 2.0, "vector": 1.0, "scalar": 0.5},
+               "launch_coef": 3.0, "source": "measured", "n_samples": 9,
+               "residual": 0.1,
+               # schema-1 writers never produced this key; even if one
+               # sneaks in, the repair ignores it
+               "work_coef": {"bogus": 5.0}}
+    with pytest.warns(RuntimeWarning, match="stale schema 1"):
+        prof = CAL.CalibrationProfile.from_json(payload)
+    assert dict(prof.work_coef) == {c: 0.0 for c in CAL.WORK_CLASSES}
+    assert prof.instance_coef == 0.0
+    assert dict(prof.dtype_scale) == dict(CAL.DEFAULT_DTYPE_SCALE)
+    assert dict(prof.item_coef) == {"block": 2.0, "vector": 1.0,
+                                    "scalar": 0.5}
+    assert prof.launch_coef == 3.0 and prof.n_samples == 9
+    # zero work => the repaired profile's cost is the pure traffic
+    # formula under its own coefficients (no silent misfit)
+    t = C.Traffic()
+    t.loads["block"] = 7
+    t.work["dot"] = 3
+    t.launches = 2
+    assert prof.cost(t) == 7 * 2.0 + 2 * 3.0
+
+    # and through the disk loader: repaired, not None
+    path = CAL.profile_path(tmp_path, "pallas", "dev")
+    path.parent.mkdir(parents=True)
+    path.write_text(json.dumps(payload))
+    with pytest.warns(RuntimeWarning, match="stale schema 1"):
+        back = CAL.load_profile(tmp_path, backend="pallas",
+                                device_kind="dev")
+    assert back is not None
+    assert back.digest() == prof.digest()
+
+
+def test_wrong_length_work_vector_repaired():
+    """A schema-2 profile whose work vector doesn't match the current
+    class set loads with the known classes repaired (missing -> default,
+    unknown -> dropped) and a warning."""
+    base = {"schema": CAL.PROFILE_SCHEMA,
+            "item_coef": {"block": 1.0, "vector": 1.0, "scalar": 1.0},
+            "launch_coef": 1.0}
+    with pytest.warns(RuntimeWarning, match="repairing"):
+        prof = CAL.CalibrationProfile.from_json(
+            {**base, "work_coef": {"matmul": 1e-9}})
+    assert dict(prof.work_coef) == {"matmul": 1e-9, "elementwise": 0.0,
+                                    "reduce": 0.0}
+    with pytest.warns(RuntimeWarning, match="repairing"):
+        prof = CAL.CalibrationProfile.from_json(
+            {**base, "work_coef": {"matmul": 1e-9, "conv2d": 7.0,
+                                   "elementwise": 0.0, "reduce": 0.0}})
+    assert set(prof.work_coef) == set(CAL.WORK_CLASSES)
+    assert "conv2d" not in prof.work_coef
+
+
+def test_negative_work_or_instance_coef_rejected(tmp_path):
+    base = {"schema": CAL.PROFILE_SCHEMA, "launch_coef": 1.0,
+            "item_coef": {"block": 1.0, "vector": 1.0, "scalar": 1.0}}
+    for bad in ({"work_coef": {"matmul": -1.0, "elementwise": 0.0,
+                               "reduce": 0.0}},
+                {"instance_coef": -0.5},
+                {"dtype_scale": {"f32": 0.0}}):
+        with pytest.raises(ValueError):
+            CAL.CalibrationProfile.from_json({**base, **bad})
+    # on disk that's a corrupt file: warn and fall back to the default
+    path = CAL.profile_path(tmp_path, "pallas", "dev")
+    path.parent.mkdir(parents=True)
+    path.write_text(json.dumps({**base, "instance_coef": -0.5}))
+    with pytest.warns(RuntimeWarning, match="stale/corrupt"):
+        assert CAL.load_profile(tmp_path, backend="pallas",
+                                device_kind="dev") is None
+
+
+def test_item_bytes_override_keeps_work_term():
+    """The legacy ``item_bytes`` dict overrides only the item
+    coefficients — a measured profile's compute term survives the
+    back-compat shim."""
+    prof = replace(CAL.DEFAULT_PROFILE,
+                   work_coef={"matmul": 1e-9, "elementwise": 0.0,
+                              "reduce": 0.0},
+                   instance_coef=2.0)
+    ones = {"block": 1, "vector": 1, "scalar": 1}
+    merged = CAL.resolve_profile(ones, prof)
+    assert merged.source == "item_bytes"
+    assert dict(merged.work_coef) == dict(prof.work_coef)
+    assert merged.instance_coef == prof.instance_coef
+    t = C.Traffic()
+    t.loads["block"] = 10
+    t.work["dot"] = 3
+    t.launches = 2
+    t.instances = 4.0
+    expect = (10 * 1 + CAL.KERNEL_LAUNCH_COST * 2    # overridden items
+              + 2.0 * 4.0                            # instance term
+              + 1e-9 * 2.0 * 128 ** 3 * 3)           # matmul FLOPs
+    assert merged.cost(t) == pytest.approx(expect)
+
+
+# ---------------------------------------------------------------------------
+# Fitting the compute term
+# ---------------------------------------------------------------------------
+
+def _rows_with_work(rng, n=60):
+    rows = []
+    for _ in range(n):
+        rows.append({"block": float(rng.integers(1, 200)),
+                     "vector": float(rng.integers(0, 50)),
+                     "scalar": float(rng.integers(0, 10)),
+                     "work_matmul": float(rng.integers(0, 40)) * 1e6,
+                     "work_elementwise": float(rng.integers(0, 400)) * 1e4,
+                     "work_reduce": float(rng.integers(0, 100)) * 1e4,
+                     "instances": float(rng.integers(1, 64)),
+                     "launches": 1.0})
+    return rows
+
+
+def test_fit_recovers_work_and_instance_coefficients():
+    rng = np.random.default_rng(5)
+    rows = _rows_with_work(rng)
+    true = {"block": 3e-5, "vector": 2e-6, "scalar": 1e-7,
+            "work_matmul": 4e-12, "work_elementwise": 6e-11,
+            "work_reduce": 2e-11, "instances": 3e-4, "launches": 4e-4}
+    times = [sum(true[k] * v for k, v in r.items()) for r in rows]
+    prof = CAL.fit_profile(rows, times, backend="pallas",
+                           device_kind="testdev")
+    for cls in CAL.WORK_CLASSES:
+        assert prof.work_coef[cls] == pytest.approx(
+            true["work_" + cls], rel=1e-5)
+    assert prof.instance_coef == pytest.approx(true["instances"],
+                                               rel=1e-5)
+    assert prof.residual < 1e-6
+    for r, t in zip(rows, times):
+        assert prof.predict(r) == pytest.approx(t, rel=1e-5)
+
+
+def test_fit_clamps_negative_work_coefficient_to_zero():
+    """A work class whose joint fit would come out negative (a work
+    *discount* no ranking model can use) is clamped to zero and the
+    rest refitted — it must not poison the traffic coefficients."""
+    rng = np.random.default_rng(9)
+    rows = _rows_with_work(rng)
+    times = [3e-5 * r["block"] + 2e-6 * r["vector"] + 1e-7 * r["scalar"]
+             + 6e-11 * r["work_elementwise"] + 2e-11 * r["work_reduce"]
+             + 3e-4 * r["instances"] + 4e-4 * r["launches"]
+             - 1e-13 * r["work_matmul"]        # the anti-physical term
+             for r in rows]
+    prof = CAL.fit_profile(rows, times)
+    assert prof.work_coef["matmul"] == 0.0
+    assert prof.work_coef["elementwise"] > 0
+    assert prof.work_coef["reduce"] > 0
+    assert prof.item_coef["block"] == pytest.approx(3e-5, rel=0.05)
+    assert prof.instance_coef == pytest.approx(3e-4, rel=0.05)
+
+
+def test_fitted_profile_with_work_roundtrips(tmp_path):
+    rng = np.random.default_rng(13)
+    rows = _rows_with_work(rng)
+    times = [sum({"block": 3e-5, "vector": 2e-6, "scalar": 1e-7,
+                  "work_matmul": 4e-12, "work_elementwise": 6e-11,
+                  "work_reduce": 2e-11, "instances": 3e-4,
+                  "launches": 4e-4}[k] * v for k, v in r.items())
+             for r in rows]
+    prof = CAL.fit_profile(rows, times, backend="pallas",
+                           device_kind="dev")
+    CAL.save_profile(prof, root=tmp_path)
+    back = CAL.load_profile(tmp_path, backend="pallas",
+                            device_kind="dev")
+    assert back is not None
+    assert dict(back.work_coef) == pytest.approx(dict(prof.work_coef))
+    assert back.instance_coef == pytest.approx(prof.instance_coef)
+    assert back.digest() == prof.digest()
+
+
+# ---------------------------------------------------------------------------
 # Rank agreement helper
 # ---------------------------------------------------------------------------
 
@@ -244,3 +423,30 @@ def test_bench_pipeline_artifact_committed():
     cal = rows["calibration_profile"]
     assert float(cal["pooled_spearman"]) >= 0.6
     assert int(cal["n_samples"]) >= 5
+
+
+def test_bench_artifact_region_rank_agreement():
+    """Every multi-region row in the committed artifact must have a
+    non-negative per-row region rank agreement, and the attention rows
+    — whose softmax+PV kernel the byte-only model ranked dead wrong
+    (Spearman -1.00 before the compute-aware features) — must agree
+    decisively (>= 0.5).  The pooled Spearman floor is the tentpole's
+    acceptance threshold (0.7)."""
+    path = REPO_ROOT / "BENCH_pipeline.json"
+    data = json.loads(path.read_text())
+    rows = {r["name"]: dict(p.split("=", 1)
+                            for p in r["derived"].split(";") if "=" in p)
+            for r in data["rows"]}
+    for name, d in rows.items():
+        if "/" in d.get("region_times_us", ""):  # multi-region lowering
+            assert float(d["region_spearman"]) >= 0.0, (
+                f"{name}: region rank agreement went negative")
+    for name in ("pipeline_attention", "pipeline_causal_attention",
+                 "pipeline_gqa_attention"):
+        assert float(rows[name]["region_spearman"]) >= 0.5, name
+    cal = rows["calibration_profile"]
+    assert float(cal["pooled_spearman"]) >= 0.7
+    # the calibration row reports the full compute-aware coefficient
+    # vector so artifact diffs show what the fit learned
+    for cls in CAL.WORK_CLASSES:
+        assert f"work_{cls}_coef" in cal

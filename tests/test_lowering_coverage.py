@@ -98,8 +98,10 @@ def test_pipeline_lowers_selected_snapshot(name, rng):
     rep = kern.lowering_report
     assert rep is not None and rep.fallbacks == 0, rep.summary()
     # selection's choice is what lowered: the driver no longer rewrites
-    # snapshot_index/cost after the fact
-    sel = SEL.select(g, dims)
+    # snapshot_index/cost after the fact.  The pallas backend selects
+    # under the grouped, residency-aware objective — the cost of the
+    # kernels the region-group lowering actually emits
+    sel = SEL.select(g, dims, group=True, blocks=blocks)
     assert kern.snapshot_index == sel.snapshot_index
     assert kern.cost == sel.cost
     # per-kernel traffic attribution matches the emitted kernels (a

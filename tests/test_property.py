@@ -160,6 +160,107 @@ def test_causal_traffic_monotone_in_seq_len(n, d):
     assert cost(n) < cost(n + 1)
 
 
+# ---------------------------------------------------------------------------
+# The compute-aware cost model
+# ---------------------------------------------------------------------------
+
+_PROGRAM_BUILDERS = {
+    "layernorm_matmul": (lambda: AP.layernorm_matmul_program(32.0),
+                         ("M", "K", "N")),
+    "rmsnorm_ffn_swiglu": (lambda: AP.rmsnorm_ffn_swiglu_program(16.0),
+                           ("M", "D", "K", "N")),
+    "attention": (lambda: AP.attention_program(0.125),
+                  ("M", "D", "N", "L")),
+    "causal_attention": (lambda: AP.causal_attention_program(0.25),
+                         ("M", "D", "N", "L")),
+    "gqa_attention": (lambda: AP.gqa_attention_program(0.25, causal=True),
+                      ("H", "M", "D", "N", "L")),
+}
+_SNAPSHOT_CACHE = {}
+
+
+def _snapshots(name):
+    if name not in _SNAPSHOT_CACHE:
+        _SNAPSHOT_CACHE[name] = fuse(_PROGRAM_BUILDERS[name][0]())
+    return _SNAPSHOT_CACHE[name]
+
+
+@settings(max_examples=20, deadline=None)
+@given(name=st.sampled_from(sorted(_PROGRAM_BUILDERS)),
+       cls=st.sampled_from(C.WORK_CLASSES),
+       delta=st.floats(1e-12, 1e-6),
+       dim_seed=st.integers(0, 1000))
+def test_cost_monotone_in_each_work_coefficient(name, cls, delta,
+                                                dim_seed):
+    """Raising any single work coefficient never makes a snapshot look
+    cheaper — and strictly raises the cost of a snapshot that does work
+    of that class (the compute term prices work, never discounts it)."""
+    from dataclasses import replace
+
+    from repro.core import calibrate as CAL
+    from repro.core import selection as SEL
+
+    rng = np.random.default_rng(dim_seed)
+    _, dim_names = _PROGRAM_BUILDERS[name]
+    dims = {d: int(rng.integers(1, 5)) for d in dim_names}
+    snap = _snapshots(name)[0]
+    bumped = replace(
+        CAL.DEFAULT_PROFILE,
+        work_coef={**CAL.DEFAULT_WORK_COEF, cls: delta})
+    base = SEL.snapshot_cost(snap, dims)
+    raised = SEL.snapshot_cost(snap, dims, profile=bumped)
+    assert raised >= base
+    if C.traffic(snap, dims).flops()[cls] > 0:
+        assert raised > base
+
+
+@settings(max_examples=20, deadline=None)
+@given(name=st.sampled_from(sorted(_PROGRAM_BUILDERS)),
+       dim_seed=st.integers(0, 1000))
+def test_grouped_objective_never_exceeds_global(name, dim_seed):
+    """The residency-aware grouped objective can only *uncharge* edges
+    and merge launches: for every snapshot of every in-repo program, at
+    any dims, sum(group_cost) <= snapshot_cost under the default
+    profile."""
+    from repro.core import selection as SEL
+
+    rng = np.random.default_rng(dim_seed)
+    _, dim_names = _PROGRAM_BUILDERS[name]
+    dims = {d: int(rng.integers(1, 5)) for d in dim_names}
+    for snap in _snapshots(name):
+        grouped = SEL.objective_cost(snap, dims, group=True)
+        glob = SEL.snapshot_cost(snap, dims)
+        assert grouped <= glob
+
+
+@settings(max_examples=20, deadline=None)
+@given(name=st.sampled_from(sorted(_PROGRAM_BUILDERS)),
+       dim_seed=st.integers(0, 1000),
+       block=st.floats(0.1, 10.0), launch=st.floats(0.0, 1e6))
+def test_zero_work_profile_is_pre_work_formula_exactly(name, dim_seed,
+                                                       block, launch):
+    """Any profile with all-zero work and instance coefficients prices a
+    snapshot bit-identically to the pre-work-feature formula
+    ``bytes_moved + launch_coef * launches`` — the new features are
+    invisible until a fit turns them on."""
+    from dataclasses import replace
+
+    from repro.core import calibrate as CAL
+    from repro.core import selection as SEL
+
+    rng = np.random.default_rng(dim_seed)
+    _, dim_names = _PROGRAM_BUILDERS[name]
+    dims = {d: int(rng.integers(1, 5)) for d in dim_names}
+    coef = {"block": block, "vector": block / 128.0,
+            "scalar": block / 16384.0}
+    prof = replace(CAL.DEFAULT_PROFILE, item_coef=coef,
+                   launch_coef=launch)
+    snap = _snapshots(name)[0]
+    t = C.traffic(snap, dims)
+    assert SEL.snapshot_cost(snap, dims, profile=prof) == (
+        t.bytes_moved(coef) + launch * t.launches)
+
+
 @settings(max_examples=10, deadline=None)
 @given(seed=st.integers(0, 1000),
        splits=st.tuples(st.integers(1, 4), st.integers(1, 4)))
