@@ -24,7 +24,11 @@ run against the committed baseline and exits non-zero if
     times are never compared across machines, only the same-machine
     fused/unfused *ratio*; it is aggregated over every program so
     single-row scheduler noise averages out; and only a >1.5x collapse
-    fails so shared-runner noise cannot, or
+    fails so shared-runner noise cannot,
+  * the same geomean speedup falls below **1.0x** in absolute terms —
+    fusion slower than the launch-per-operator baseline is wrong no
+    matter what the pin says (the baseline is per-op jitted, so this is
+    fusion vs genuinely-no-fusion, not vs XLA's own fusion), or
   * a baseline row is missing from the fresh run.
 
 Absolute wall-clock columns are never gated — CI runners are too noisy;
@@ -186,6 +190,14 @@ def main(argv) -> int:
                 f"wall-clock: geomean fused-vs-unfused speedup "
                 f"{cur_geo:.2f}x < {floor:.2f}x (baseline "
                 f"{base_geo:.2f}x / {WALL_TOLERANCE})")
+        # absolute floor, independent of the pin: fused code slower
+        # than the launch-per-operator baseline is a regression even if
+        # an old baseline was pinned that low
+        if cur_geo < 1.0:
+            failures.append(
+                f"wall-clock: geomean fused-vs-unfused speedup "
+                f"{cur_geo:.2f}x < 1.00x — fusion is slower than the "
+                "per-op unfused baseline")
     # the fallback gate covers EVERY current row, including programs not
     # yet pinned into the baseline — a new benchmark may not sneak a
     # non-lowering snapshot past the gate

@@ -139,8 +139,14 @@ def bench_pipeline_example(name: str, repeats: int = 5, bs: int = 16,
 
     kf = pipeline.compile(g, dims, backend="jax", blocks=blocks,
                           cache=cache)
+    # the unfused baseline is jitted PER OPERATOR (launch per top-level
+    # op, intermediates materialized between launches) — the paper's
+    # actual baseline.  Whole-program jit here would hand the unfused
+    # graph to XLA, which fuses it itself, and "speedup" would compare
+    # our fusion against XLA's instead of against no fusion (that made
+    # the pinned ratio dip below 1.0x on several rows).
     ku = pipeline.compile(g, dims, backend="jax", blocks=blocks,
-                          fused=False, cache=cache)
+                          fused=False, jit="per-op", cache=cache)
     fused_us, unfused_us = timed(kf), timed(ku)
     # the second compile must be an in-process cache hit
     rehit = pipeline.compile(g, dims, backend="jax", blocks=blocks,

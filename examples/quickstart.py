@@ -261,3 +261,37 @@ print(f"  objective: global {SEL.objective_cost(snapshots[-1], dims):.4g}"
 # then python benchmarks/check_regression.py --pin BENCH_ci.json \
 #   benchmarks/baseline.json pins the gated keys, including the rank
 #   agreement the compute-aware features bought.
+
+# 11. numerical safety: the appendix's online-softmax pass, compiled.
+#     pipeline.compile stabilizes softmax-bearing programs BY DEFAULT
+#     (stabilize=None auto-detects a block-valued top-level exp via
+#     numerics.needs_stabilization): numerics.stabilize rewrites the
+#     exp producer into row_max / row_shift / exp(shifted) and threads
+#     the exponent alongside the significand, so the fused serial spine
+#     carries a running "max" with its accumulators retagged "+@k"
+#     (rescale-on-new-max).  That IS Flash Attention's online softmax,
+#     derived from the paper's fused program — and it lowers on every
+#     backend, still as ONE Pallas launch with zero fallbacks.
+#     The flag is part of the cache key (stabilized and raw kernels
+#     never alias) and of the on-disk CachePlan; pass stabilize=False
+#     to opt out (e.g. to reproduce the raw paper listings), or
+#     stabilize=True to force it on an exp-free program (a no-op
+#     rewrite there).  Exp-free programs (layernorm, swiglu) skip the
+#     pass automatically: same graphs, same cache keys as before.
+import warnings
+
+huge = {"Q": (Q * 2000).astype(np.float32),   # |logit| ~ 1e4
+        "KT": K.T.astype(np.float32),
+        "VT": V.T.astype(np.float32)}
+safe = pipeline.compile(graph, dims, backend="jax")
+assert safe.stabilized           # auto-detected, no opt-in needed
+out = np.asarray(safe(huge)["O"])
+raw = pipeline.compile(graph, dims, backend="jax", stabilize=False)
+with warnings.catch_warnings():
+    warnings.simplefilter("ignore")      # overflow in exp, by design
+    out_raw = np.asarray(raw(huge)["O"])
+print()
+print("numerical safety at |logit| ~ 1e4:")
+print(f"  stabilized (default): finite={bool(np.isfinite(out).all())}")
+print(f"  stabilize=False     : finite={bool(np.isfinite(out_raw).all())}")
+assert np.isfinite(out).all() and not np.isfinite(out_raw).all()

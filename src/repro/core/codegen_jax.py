@@ -50,8 +50,7 @@ def _eval(g: Graph, inputs: Sequence[Any]) -> List[Any]:
         elif isinstance(node, FuncNode):
             env[(nid, 0)] = node.op.apply(jnp, *ins)
         elif isinstance(node, ReduceNode):
-            env[(nid, 0)] = jnp.sum(ins[0].astype(jnp.float32),
-                                    axis=0).astype(ins[0].dtype)
+            env[(nid, 0)] = _lower_reduce(node, ins[0])
         elif isinstance(node, MiscNode):
             res = node.fn(jnp, *ins)
             if node.n_out() == 1:
@@ -68,6 +67,15 @@ def _eval(g: Graph, inputs: Sequence[Any]) -> List[Any]:
     return [outs[oid] for oid in g.output_ids]
 
 
+def _lower_reduce(node: ReduceNode, stacked) -> Any:
+    if node.op == O.REDUCE_MAX:
+        return jnp.max(stacked.astype(jnp.float32),
+                       axis=0).astype(stacked.dtype)
+    assert node.op == O.REDUCE_ADD, node.op
+    return jnp.sum(stacked.astype(jnp.float32),
+                   axis=0).astype(stacked.dtype)
+
+
 def _lower_map(node: MapNode, ins: Sequence[Any]) -> List[Any]:
     mapped_ins = [v for v, m in zip(ins, node.mapped) if m]
     assert mapped_ins, "maps with no mapped input need static lengths"
@@ -82,25 +90,50 @@ def _lower_map(node: MapNode, ins: Sequence[Any]) -> List[Any]:
         outs = jax.vmap(body, in_axes=[0] * len(mapped_ins))(*mapped_ins)
         return list(outs)
 
-    # serial map: accumulated ports become f32 scan carries
+    # serial map: accumulated ports become f32 scan carries.  "max"
+    # ports carry a running maximum (init -inf) and "+@k" ports are
+    # additive carries rescaled against max port k on every step —
+    # together they are the online-softmax recurrence (see ops.py).
     first = jax.tree.map(lambda x: x[0], tuple(mapped_ins))
     out_shapes = jax.eval_shape(lambda xs: body(*xs), first)
 
+    red_ports = [p for p, r in enumerate(node.reduced) if r is not None]
+    cidx = {p: i for i, p in enumerate(red_ports)}
+
     def scan_body(carry, xs):
         res = body(*xs)
-        new_carry, ys = [], []
-        ci = 0
+        vals = {p: res[p].astype(jnp.float32) for p in red_ports}
+        z_old, z_new = {}, {}
+        for p in red_ports:
+            if node.reduced[p] == O.REDUCE_MAX:
+                z_old[p] = carry[cidx[p]]
+                z_new[p] = jnp.maximum(z_old[p], vals[p])
+        new_carry = list(carry)
+        ys = []
         for p, r in enumerate(node.reduced):
             if r is None:
                 ys.append(res[p])
+                continue
+            c = carry[cidx[p]]
+            if r == O.REDUCE_ADD:
+                nc = c + vals[p]
+            elif r == O.REDUCE_MAX:
+                nc = z_new[p]
             else:
-                new_carry.append(carry[ci] + res[p].astype(jnp.float32))
-                ci += 1
+                k = O.rescaled_ref(r)
+                assert k is not None, r
+                step = vals[p] * O.bcast_to(
+                    jnp, jnp.exp(vals[k] - z_new[k]), vals[p])
+                nc = c * O.bcast_to(
+                    jnp, jnp.exp(z_old[k] - z_new[k]), c) + step
+            new_carry[cidx[p]] = nc
         return tuple(new_carry), tuple(ys)
 
     carry0 = tuple(
-        jnp.zeros(out_shapes[p].shape, jnp.float32)
-        for p, r in enumerate(node.reduced) if r is not None)
+        jnp.full(out_shapes[p].shape, -jnp.inf, jnp.float32)
+        if node.reduced[p] == O.REDUCE_MAX
+        else jnp.zeros(out_shapes[p].shape, jnp.float32)
+        for p in red_ports)
     carry, ys = jax.lax.scan(scan_body, carry0, tuple(mapped_ins))
     results: List[Any] = []
     ci = yi = 0
@@ -114,13 +147,69 @@ def _lower_map(node: MapNode, ins: Sequence[Any]) -> List[Any]:
     return results
 
 
-def compile_program(g: Graph) -> Callable[..., List[Any]]:
-    """Return f(*stacked_inputs) -> [stacked_outputs], ready for jax.jit."""
+def compile_program(g: Graph, per_op_jit: bool = False
+                    ) -> Callable[..., List[Any]]:
+    """Return f(*stacked_inputs) -> [stacked_outputs], ready for jax.jit.
 
-    def fn(*inputs):
-        return _eval(g, inputs)
+    With ``per_op_jit`` each top-level operator is jitted *separately*
+    and dispatched sequentially from python, with every intermediate
+    list materialized between launches.  That is the paper's
+    launch-per-operator unfused baseline; jitting the whole unfused
+    program instead hands the full graph to XLA, which fuses it itself,
+    and the benchmark then measures "our fusion vs XLA's fusion" rather
+    than fusion vs no fusion.
+    """
 
-    return fn
+    if not per_op_jit:
+        def fn(*inputs):
+            return _eval(g, inputs)
+
+        return fn
+
+    node_fns: Dict[int, Callable] = {}
+    for nid in g.topo():
+        node = g.nodes[nid]
+        if isinstance(node, (InputNode, OutputNode)):
+            continue
+
+        def make(node=node):
+            if isinstance(node, MapNode):
+                def nf(*ins):
+                    return tuple(_lower_map(node, ins))
+            elif isinstance(node, FuncNode):
+                def nf(*ins):
+                    return (node.op.apply(jnp, *ins),)
+            elif isinstance(node, ReduceNode):
+                def nf(*ins):
+                    return (_lower_reduce(node, ins[0]),)
+            elif isinstance(node, MiscNode):
+                def nf(*ins):
+                    res = node.fn(jnp, *ins)
+                    return res if node.n_out() > 1 else (res,)
+            else:
+                raise TypeError(node)
+            return jax.jit(nf)
+
+        node_fns[nid] = make()
+
+    def fn_per_op(*inputs):
+        env: Dict = {}
+        for nid, v in zip(g.input_ids, inputs):
+            env[(nid, 0)] = v
+        outs: Dict[int, Any] = {}
+        for nid in g.topo():
+            node = g.nodes[nid]
+            if isinstance(node, InputNode):
+                continue
+            ins = [env[(e.src, e.sp)] for e in g.in_edges(nid)]
+            if isinstance(node, OutputNode):
+                outs[nid] = ins[0]
+                continue
+            for p, r in enumerate(node_fns[nid](*ins)):
+                env[(nid, p)] = r
+        return [outs[oid] for oid in g.output_ids]
+
+    return fn_per_op
 
 
 def run_jax(g: Graph, inputs: Dict[str, Any]) -> Dict[str, Any]:

@@ -41,6 +41,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import ops as O
 from repro.core import regions as R
 from repro.core.blocks import item_shape as infer_item_shape
 from repro.core.blocks import merged_shape
@@ -245,7 +246,8 @@ def _eval_inner(g: Graph, env: Dict, dims: Dict[str, int],
         elif isinstance(node, ReduceNode):
             acc = ins[0][0]
             for item in ins[0][1:]:
-                acc = acc + item
+                acc = (jnp.maximum(acc, item)
+                       if node.op == O.REDUCE_MAX else acc + item)
             env[(nid, 0)] = acc
         elif isinstance(node, MapNode) and node.dim in grid_axes:
             if node.serial:
@@ -259,8 +261,8 @@ def _eval_inner(g: Graph, env: Dict, dims: Dict[str, int],
                 env[(nid, pp)] = res[pp]
         elif isinstance(node, MapNode):
             n = dims[node.dim]
-            accs: List[Any] = [None] * node.n_out()
-            lists: List[List[Any]] = [[] for _ in range(node.n_out())]
+            collected: List[Any] = [[] if r is None else None
+                                    for r in node.reduced]
             for i in range(n):
                 ienv: Dict = {}
                 for p, e in enumerate(g.in_edges(nid)):
@@ -269,14 +271,11 @@ def _eval_inner(g: Graph, env: Dict, dims: Dict[str, int],
                         v = v[i]
                     ienv[(node.inner.input_ids[p], 0)] = v
                 res = _eval_inner(node.inner, ienv, dims, grid_axes)
-                for pp, r in enumerate(node.reduced):
-                    if r is None:
-                        lists[pp].append(res[pp])
-                    else:
-                        accs[pp] = res[pp] if accs[pp] is None else \
-                            accs[pp] + res[pp]
-            for pp, r in enumerate(node.reduced):
-                env[(nid, pp)] = lists[pp] if r is None else accs[pp]
+                # handles plain "+" and the coupled "max"/"+@k" carries
+                # of stabilized programs alike (static unroll)
+                O.serial_accum_step(collected, res, node.reduced, jnp)
+            for pp in range(node.n_out()):
+                env[(nid, pp)] = collected[pp]
         else:
             raise TypeError(node)
     return [out[oid] for oid in g.output_ids]
@@ -423,8 +422,24 @@ def emit_region(spec: RegionSpec, dims: Dict[str, int],
     in_types = [rg.nodes[i].vtype for i in rg.input_ids]
     types = rg.infer_types()
     acc_node = base_g.nodes[acc_id] if acc_id is not None else None
-    if isinstance(acc_node, ReduceNode) and acc_node.op != "+":
-        raise RegionError(f"non-additive reduce {acc_node.op!r}")
+    if isinstance(acc_node, ReduceNode) and acc_node.op not in (
+            O.REDUCE_ADD, O.REDUCE_MAX):
+        raise RegionError(f"unsupported reduce {acc_node.op!r}")
+    # reduced tags of the compressed accumulator list, and the port ->
+    # accumulator-index map "+@k" tags resolve through
+    if isinstance(acc_node, ReduceNode):
+        acc_tags: List[Any] = [acc_node.op]
+        acc_of_port: Dict[int, int] = {0: 0}
+    elif acc_node is not None:
+        acc_tags = [r for r in acc_node.reduced if r is not None]
+        acc_of_port = {p: ai for ai, p in enumerate(
+            p for p, r in enumerate(acc_node.reduced) if r is not None)}
+        for r in acc_tags:
+            if (r not in (O.REDUCE_ADD, O.REDUCE_MAX)
+                    and O.rescaled_ref(r) is None):
+                raise RegionError(f"unsupported reduced tag {r!r}")
+    else:
+        acc_tags, acc_of_port = [], {}
     epilogue_skip = (_downstream(base_g, acc_id)
                      if acc_id is not None else set())
     slots = _classify_outputs(spec, levels, base_g, acc_id, red_dim, types)
@@ -542,12 +557,36 @@ def emit_region(spec: RegionSpec, dims: Dict[str, int],
 
         @pl.when(ri == 0)
         def _init():
-            for a in acc_refs:
-                a[...] = jnp.zeros_like(a)
+            for a, tag in zip(acc_refs, acc_tags):
+                a[...] = (jnp.full_like(a, -jnp.inf)
+                          if tag == O.REDUCE_MAX else jnp.zeros_like(a))
 
         partials, steps = serial_step(values)
-        for a, p_val in zip(acc_refs, partials):
-            a[...] += p_val.astype(jnp.float32)
+        vals = [p_val.astype(jnp.float32) for p_val in partials]
+        # two-phase coupled update (see ops.serial_accum_step): read the
+        # old running maxima before any scratch write, then advance every
+        # accumulator — "+@k" ports rescale by exp(z_old-z_new) exactly as
+        # in the online-softmax recurrence
+        z_old: Dict[int, Any] = {}
+        z_new: Dict[int, Any] = {}
+        for ai, tag in enumerate(acc_tags):
+            if tag == O.REDUCE_MAX:
+                z_old[ai] = acc_refs[ai][...]
+                z_new[ai] = jnp.maximum(z_old[ai], vals[ai])
+        for ai, tag in enumerate(acc_tags):
+            if tag == O.REDUCE_ADD:
+                acc_refs[ai][...] += vals[ai]
+            elif tag == O.REDUCE_MAX:
+                acc_refs[ai][...] = z_new[ai]
+            else:
+                ak = acc_of_port[O.rescaled_ref(tag)]
+                step = vals[ai] * O.bcast_to(
+                    jnp, jnp.exp(vals[ak] - z_new[ak]), vals[ai])
+                acc_refs[ai][...] = (
+                    acc_refs[ai][...]
+                    * O.bcast_to(jnp, jnp.exp(z_old[ak] - z_new[ak]),
+                                 acc_refs[ai][...])
+                    + step)
         for o_ref, slot, ish in zip(out_refs, slots, out_item_shapes):
             if slot.kind == "step":
                 write(o_ref, slot, ish, steps[slot.step_port])

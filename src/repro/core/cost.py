@@ -56,7 +56,7 @@ from repro.core.graph import (FuncNode, Graph, InputNode, MapNode, MiscNode,
 
 WORK_CLASSES = ("matmul", "elementwise", "reduce")
 MATMUL_OPS = frozenset({"dot", "outer"})
-REDUCE_OPS = frozenset({"row_sum", "reduce_add"})
+REDUCE_OPS = frozenset({"row_sum", "row_max", "reduce_add", "reduce_max"})
 REPR_BLOCK_EXTENT = 128
 
 
@@ -189,7 +189,8 @@ def _walk(g: Graph, in_types: Sequence[VType], in_global: Sequence[bool],
         elif isinstance(node, ReduceNode):
             e = g.in_edge(nid, 0)
             vt = types[(e.src, e.sp)]
-            t.work["reduce_add"] += mult * max(
+            key = "reduce_max" if node.op == "max" else "reduce_add"
+            t.work[key] += mult * max(
                 _n_items(vt.dims, sizes, causal, enclosing) - 1, 0)
         elif isinstance(node, MapNode):
             dim_n = _eff_count(node.dim, sizes, causal, enclosing)

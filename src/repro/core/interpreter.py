@@ -40,8 +40,10 @@ def _map_length(node: MapNode, in_values: Sequence[Any],
 def _accum(acc, val, op: str, xp):
     if acc is None:
         return val
-    if op == "+":
+    if op == O.REDUCE_ADD:
         return acc + val
+    if op == O.REDUCE_MAX:
+        return xp.maximum(acc, val)
     raise NotImplementedError(op)
 
 
@@ -85,17 +87,25 @@ def eval_graph(g: Graph, in_values: Sequence[Any], dims: Dict[str, int],
             for p, r in enumerate(node.reduced):
                 if r is None:
                     collected[p] = []
+            plain = O.plain_serial_tags(node.reduced)
             for i in range(length):
                 inner_in = [v[i] if node.mapped[p] else v
                             for p, v in enumerate(ins)]
                 inner_out = eval_graph(node.inner, inner_in, dims, xp, stats,
                                        apply_fn, accum_fn)
-                for p, r in enumerate(node.reduced):
-                    if r is None:
-                        collected[p].append(inner_out[p])
-                    else:
-                        collected[p] = accum_fn(collected[p], inner_out[p], r,
-                                                xp)
+                if plain:
+                    # legacy path: pluggable accum_fn (run_stabilized
+                    # threads SEPair accumulation through it)
+                    for p, r in enumerate(node.reduced):
+                        if r is None:
+                            collected[p].append(inner_out[p])
+                        else:
+                            collected[p] = accum_fn(collected[p],
+                                                    inner_out[p], r, xp)
+                else:
+                    # stabilized graphs: coupled "max"/"+@k" carries
+                    O.serial_accum_step(collected, inner_out,
+                                        node.reduced, xp)
             for p in range(node.n_out()):
                 env[(nid, p)] = collected[p]
         else:

@@ -17,45 +17,66 @@ Pair algebra (appendix):
 Any elementwise operator whose top-level operation is ``exp`` produces a
 pair with ``t = rowmax(arg)``; pairs collapse back to plain values
 (``S * e^t``) when they reach a consumer without pair semantics or a
-program output.  Running the paper's fused Flash-Attention program under
-this executor reproduces online softmax bit-for-bit in behaviour: the two
-accumulators are rescaled by ``e^{t_old - z}`` whenever the running max
-grows.
+program output.
+
+Two executors implement the algebra:
+
+* :func:`run_stabilized` — the interpreter-level oracle: plain graphs run
+  under pair-aware operator semantics (``stabilized_apply``).
+* :func:`stabilize` — the graph-level rewrite the compiled backends
+  lower: pairs become explicit (significand, exponent) value edges, the
+  ``exp`` producer splits into ``row_max``/``row_shift``/``exp``, and a
+  serial map accumulating a pair grows a ``"max"`` carry port with its
+  additive ports retagged ``"+@k"`` (rescale-on-new-max; see
+  ``ops.serial_accum_step``).  The output graph contains only ordinary
+  operators plus those carry tags, so ``codegen_jax``/``codegen_pallas``
+  need no pair representation at runtime — running the paper's fused
+  Flash-Attention program this way *is* online softmax, with the running
+  max and the rescaled accumulators as extra serial-spine carries.
 """
 
 from __future__ import annotations
 
 import re
 from dataclasses import dataclass
-from typing import Any
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core import ops as O
-from repro.core.graph import Graph
+from repro.core.graph import (FuncNode, Graph, InputNode, MapNode, MiscNode,
+                              OutputNode, Ref, ReduceNode, VType)
 from repro.core.interpreter import run as _run
 
 
-@dataclass
-class SEPair:
-    """Significand block/vector + per-row (or scalar) exponent."""
+# ---------------------------------------------------------------------------
+# Expression matching (normalized: whitespace- and commutativity-robust)
+# ---------------------------------------------------------------------------
 
-    s: Any
-    t: Any
-
-    def materialize(self, xp):
-        t = xp.asarray(self.t)
-        s = xp.asarray(self.s)
-        if t.ndim == 1 and s.ndim == 2:
-            return s * xp.exp(t)[:, None]
-        return s * xp.exp(t)
+_WS_RE = re.compile(r"\s+")
+_COMM_RE = re.compile(r"^a(\d+)([+*])a(\d+)$")
 
 
-def _rowmax(xp, a):
-    a = xp.asarray(a)
-    if a.ndim == 2:
-        return a.max(axis=1)
-    return a.max()
+def _canon_expr(expr: str) -> str:
+    """Whitespace-stripped form with commutative two-arg expressions in
+    canonical operand order, so ``a1 + a0`` matches ``a0+a1``."""
+    e = _WS_RE.sub("", expr)
+    m = _COMM_RE.match(e)
+    if m and int(m.group(1)) > int(m.group(3)):
+        return f"a{m.group(3)}{m.group(2)}a{m.group(1)}"
+    return e
+
+
+def _is_recip(op: O.Op) -> bool:
+    return isinstance(op, O.Elementwise) and _canon_expr(op.expr) == "1/a0"
+
+
+def _is_add(op: O.Op) -> bool:
+    return isinstance(op, O.Elementwise) and _canon_expr(op.expr) == "a0+a1"
+
+
+def _is_mul(op: O.Op) -> bool:
+    return isinstance(op, O.Elementwise) and _canon_expr(op.expr) == "a0*a1"
 
 
 def _top_level_exp(expr: str) -> bool:
@@ -74,6 +95,38 @@ def _top_level_exp(expr: str) -> bool:
     return False
 
 
+# ---------------------------------------------------------------------------
+# Pair value algebra (uniform rank rule)
+# ---------------------------------------------------------------------------
+# The leading axis is the row axis at every rank: a block's exponent is a
+# vector (one per row), a vector's exponent is a vector (every element is
+# its own row), a scalar's exponent is a scalar.  Factors broadcast by
+# appending trailing singleton axes (ops.bcast_to) — never by a
+# whole-array collapse.
+
+
+def _rowmax(xp, a):
+    """Row-wise max: reduce every non-leading axis.  1-D and 0-D values
+    are their own row maxima (identity), so per-row exponents survive
+    rank-1 significands instead of collapsing to a whole-array max."""
+    a = xp.asarray(a)
+    if a.ndim >= 2:
+        return a.max(axis=tuple(range(1, a.ndim)))
+    return a
+
+
+@dataclass
+class SEPair:
+    """Significand block/vector + per-row (or scalar) exponent."""
+
+    s: Any
+    t: Any
+
+    def materialize(self, xp):
+        s = xp.asarray(self.s)
+        return s * O.bcast_to(xp, xp.exp(xp.asarray(self.t)), s)
+
+
 def _plain(xp, v):
     return v.materialize(xp) if isinstance(v, SEPair) else v
 
@@ -86,11 +139,8 @@ def pair_add(xp, a, b):
     z = xp.maximum(a.t, b.t)
 
     def scale(p):
-        f = xp.exp(p.t - z)
         s = xp.asarray(p.s)
-        if s.ndim == 2 and xp.asarray(f).ndim == 1:
-            return s * f[:, None]
-        return s * f
+        return s * O.bcast_to(xp, xp.exp(p.t - z), s)
 
     return SEPair(scale(a) + scale(b), z)
 
@@ -102,20 +152,14 @@ def stabilized_apply(op: O.Op, xp, *args):
             # evaluate the exponent argument plainly, then split
             inner = O.Elementwise(op.expr.strip()[4:-1], op.n_in,
                                   dict(op.consts))
-            arg = inner.apply(xp, *[_plain(xp, a) for a in args])
+            arg = xp.asarray(inner.apply(xp, *[_plain(xp, a) for a in args]))
             z = _rowmax(xp, arg)
-            arg = xp.asarray(arg)
-            if arg.ndim == 2:
-                return SEPair(xp.exp(arg - z[:, None]), z)
-            return SEPair(xp.exp(arg - z), z)
-        if op.expr.strip() in ("1/a0", "1 / a0") and isinstance(args[0],
-                                                                SEPair):
+            return SEPair(xp.exp(arg - O.bcast_to(xp, z, arg)), z)
+        if _is_recip(op) and isinstance(args[0], SEPair):
             return SEPair(1.0 / args[0].s, -args[0].t)
-        if op.expr.strip() in ("a0+a1", "a0 + a1") and any(
-                isinstance(a, SEPair) for a in args):
+        if _is_add(op) and any(isinstance(a, SEPair) for a in args):
             return pair_add(xp, *args)
-        if op.expr.strip() in ("a0*a1", "a0 * a1") and any(
-                isinstance(a, SEPair) for a in args):
+        if _is_mul(op) and any(isinstance(a, SEPair) for a in args):
             a, b = args
             if isinstance(a, SEPair) and isinstance(b, SEPair):
                 return SEPair(a.s * b.s, a.t + b.t)
@@ -132,8 +176,8 @@ def stabilized_apply(op: O.Op, xp, *args):
         if isinstance(c, SEPair):
             sa = a.s if isinstance(a, SEPair) else a
             ta = a.t if isinstance(a, SEPair) else 0.0
-            cs = xp.asarray(c.s)
-            scaled = sa * (cs[:, None] if cs.ndim == 1 else cs)
+            sa = xp.asarray(sa)
+            scaled = sa * O.bcast_to(xp, xp.asarray(c.s), sa)
             return SEPair(scaled, ta + c.t)
         if isinstance(a, SEPair):
             return SEPair(op.apply(xp, a.s, c), a.t)
@@ -143,6 +187,9 @@ def stabilized_apply(op: O.Op, xp, *args):
 def stabilized_accum(acc, val, op: str, xp):
     if acc is None:
         return val
+    if op == O.REDUCE_MAX and not isinstance(acc, SEPair) \
+            and not isinstance(val, SEPair):
+        return xp.maximum(acc, val)
     if op != "+":
         raise NotImplementedError(op)
     if isinstance(acc, SEPair) or isinstance(val, SEPair):
@@ -163,3 +210,426 @@ def run_stabilized(g: Graph, inputs, dims, xp=np):
         return v
 
     return {k: mat(v) for k, v in out.items()}
+
+
+# ---------------------------------------------------------------------------
+# Graph-level rewrite: numerics.stabilize
+# ---------------------------------------------------------------------------
+
+
+def needs_stabilization(g: Graph,
+                        in_types: Optional[List[VType]] = None) -> bool:
+    """True when the program computes a block-valued top-level ``exp``
+    anywhere in its hierarchy — the producers that overflow for
+    |argument| beyond ~88 in float32 (attention softmax).  Vector- and
+    scalar-valued exps (e.g. inside swish, where exp is not top-level
+    anyway) do not qualify: the driver uses this to decide the default
+    of ``pipeline.compile(..., stabilize=None)``."""
+    types = g.infer_types(in_types)
+    for nid in g.topo():
+        node = g.nodes[nid]
+        if (isinstance(node, FuncNode)
+                and isinstance(node.op, O.Elementwise)
+                and _top_level_exp(node.op.expr)
+                and types[(nid, 0)].item == O.BLOCK):
+            return True
+        if isinstance(node, MapNode):
+            ins = []
+            for p in range(node.n_in()):
+                e = g.in_edge(nid, p)
+                t = types[(e.src, e.sp)]
+                ins.append(t.strip() if node.mapped[p] else t)
+            if needs_stabilization(node.inner, ins):
+                return True
+    return False
+
+
+@dataclass
+class _Pair:
+    """A value split into (significand ref, exponent ref) at one graph
+    level.  ``t_vt`` caches the exponent's VType (it may live on a node
+    this pass created, absent from the pre-pass type map)."""
+
+    s: Ref
+    t: Ref
+    t_vt: VType
+
+
+def _exp_kind(kind: str) -> str:
+    """Exponent item kind of a significand kind (uniform rank rule:
+    block -> vector, vector -> vector, scalar -> scalar)."""
+    return O.SCALAR if kind == O.SCALAR else O.VECTOR
+
+
+def _mat_graph(dims: Tuple[str, ...], s_kind: str, t_kind: str) -> Graph:
+    """Inner graph materializing one (s, t) pair item (or nested list):
+    inputs ``s``/``t`` (both mapped at every level), output ``s*e^t``."""
+    g = Graph()
+    s = g.add(InputNode("s", VType(dims, s_kind)))
+    t = g.add(InputNode("t", VType(dims, t_kind)))
+    if dims:
+        mid = g.add(MapNode(dims[0], _mat_graph(dims[1:], s_kind, t_kind),
+                            [True, True], [None]))
+        g.connect((s, 0), (mid, 0))
+        g.connect((t, 0), (mid, 1))
+        src: Ref = (mid, 0)
+    else:
+        e = g.add(FuncNode(O.ew("exp(a0)")))
+        g.connect((t, 0), (e, 0))
+        if s_kind == O.BLOCK and t_kind == O.VECTOR:
+            m = g.add(FuncNode(O.ROW_SCALE))
+        else:
+            m = g.add(FuncNode(O.EW_MUL.clone()))
+        g.connect((s, 0), (m, 0))
+        g.connect((e, 0), (m, 1))
+        src = (m, 0)
+    oid = g.add(OutputNode("m"))
+    g.connect(src, (oid, 0))
+    return g
+
+
+def _rescale_graph(dims: Tuple[str, ...], s_kind: str, t_kind: str) -> Graph:
+    """Inner graph computing ``s * e^{t - z}`` per item: inputs ``s``,
+    ``t``, ``z`` (all mapped below the outermost level; the caller maps
+    ``s``/``t`` and broadcasts the reduced ``z`` at the top)."""
+    g = Graph()
+    s = g.add(InputNode("s", VType(dims, s_kind)))
+    t = g.add(InputNode("t", VType(dims, t_kind)))
+    z = g.add(InputNode("z", VType(dims, t_kind)))
+    if dims:
+        mid = g.add(MapNode(dims[0],
+                            _rescale_graph(dims[1:], s_kind, t_kind),
+                            [True, True, True], [None]))
+        for p, src in enumerate(((s, 0), (t, 0), (z, 0))):
+            g.connect(src, (mid, p))
+        out_src: Ref = (mid, 0)
+    else:
+        f = g.add(FuncNode(O.ew("exp(a0-a1)", 2)))
+        g.connect((t, 0), (f, 0))
+        g.connect((z, 0), (f, 1))
+        if s_kind == O.BLOCK and t_kind == O.VECTOR:
+            m = g.add(FuncNode(O.ROW_SCALE))
+        else:
+            m = g.add(FuncNode(O.EW_MUL.clone()))
+        g.connect((s, 0), (m, 0))
+        g.connect((f, 0), (m, 1))
+        out_src = (m, 0)
+    oid = g.add(OutputNode("r"))
+    g.connect(out_src, (oid, 0))
+    return g
+
+
+def _prune_dead(g: Graph) -> None:
+    """Drop op nodes with no consumers (e.g. a negated exponent whose
+    sum cancelled) — they would otherwise be charged as work and lowered
+    for nothing."""
+    while True:
+        dead = [nid for nid, n in g.nodes.items()
+                if not isinstance(n, (InputNode, OutputNode))
+                and not g.out_edges(nid)]
+        if not dead:
+            return
+        for nid in dead:
+            g.remove_node(nid)
+
+
+def stabilize(g: Graph) -> Graph:
+    """Rewrite block-valued top-level ``exp`` producers (and their pair
+    consumers) into explicit significand/exponent edges with
+    rescale-on-max serial carries.  Returns the input graph unchanged
+    (same object) when nothing needed stabilizing.  The rewritten graph
+    contains only ordinary operators plus the ``"max"``/``"+@k"``
+    reduced tags every backend lowers, and is numerically safe at any
+    logit magnitude."""
+    g2 = g.clone()
+    _, changed = _stab_graph(g2, {}, top=True)
+    if not changed:
+        return g
+    _prune_dead(g2)
+    g2.validate()
+    return g2
+
+
+def _stab_graph(g: Graph, in_pairs: Dict[Ref, _Pair], top: bool
+                ) -> Tuple[Dict[int, _Pair], bool]:
+    """Stabilize one graph level in place.  ``in_pairs`` maps input refs
+    to pairs (their exponent ports were added by the caller).  Returns
+    ``(out_pairs, changed)`` where ``out_pairs`` maps output *port
+    indices* to pairs whose significand already feeds the port (``top``
+    levels materialize instead and return no pairs)."""
+    types = g.infer_types()
+    order = g.topo()
+    new_vt: Dict[Ref, VType] = {}
+    pairs: Dict[Ref, _Pair] = dict(in_pairs)
+    neg_of: Dict[Ref, Ref] = {}
+    mat_cache: Dict[Ref, Ref] = {}
+    out_pairs: Dict[int, _Pair] = {}
+    changed = False
+
+    def vt(ref: Ref) -> VType:
+        return new_vt[ref] if ref in new_vt else types[ref]
+
+    def add_func(op: O.Op, *srcs: Ref) -> Ref:
+        nid = g.add(FuncNode(op))
+        for p, s in enumerate(srcs):
+            g.connect(s, (nid, p))
+        kind = op.result_kind(tuple(vt(s).item for s in srcs))
+        new_vt[(nid, 0)] = VType((), kind)
+        return (nid, 0)
+
+    def neg(t_ref: Ref) -> Ref:
+        if t_ref in neg_of:
+            return neg_of[t_ref]
+        r = add_func(O.ew("-a0"), t_ref)
+        neg_of[t_ref] = r
+        neg_of[r] = t_ref
+        return r
+
+    def t_sum(t1: Optional[Ref], t2: Optional[Ref],
+              tv1: Optional[VType], tv2: Optional[VType]
+              ) -> Tuple[Optional[Ref], Optional[VType]]:
+        """Exponent sum; ``None`` is the zero exponent.  Mutual
+        negations cancel to ``None`` — the attention epilogue
+        ``row_scale(num, 1/den)`` ends exponent-free this way."""
+        if t1 is None:
+            return t2, tv2
+        if t2 is None:
+            return t1, tv1
+        if neg_of.get(t1) == t2:
+            return None, None
+        r = add_func(O.ew("a0+a1", 2), t1, t2)
+        return r, vt(r)
+
+    def materialize(pr: _Pair) -> Ref:
+        if pr.s in mat_cache:
+            return mat_cache[pr.s]
+        svt = vt(pr.s)
+        if not svt.is_list:
+            if svt.item == O.BLOCK and pr.t_vt.item == O.VECTOR:
+                e = add_func(O.ew("exp(a0)"), pr.t)
+                m = add_func(O.ROW_SCALE, pr.s, e)
+            else:
+                m = add_func(O.ew("a0*exp(a1)", 2), pr.s, pr.t)
+        else:
+            inner = _mat_graph(svt.dims[1:], svt.item, pr.t_vt.item)
+            mid = g.add(MapNode(svt.dims[0], inner, [True, True], [None]))
+            g.connect(pr.s, (mid, 0))
+            g.connect(pr.t, (mid, 1))
+            new_vt[(mid, 0)] = svt
+            m = (mid, 0)
+        mat_cache[pr.s] = m
+        return m
+
+    def rewire_port(nid: int, port: int, new_ref: Ref) -> None:
+        e = g.in_edge(nid, port)
+        if (e.src, e.sp) == new_ref:
+            return
+        g.disconnect(e)
+        g.connect(new_ref, (nid, port))
+
+    def mat_args(nid: int, arg_pairs) -> None:
+        for p, pr in enumerate(arg_pairs):
+            if pr is not None:
+                rewire_port(nid, p, materialize(pr))
+
+    def inner_input_port(inner: Graph, ref: Ref) -> Optional[int]:
+        if ref[1] == 0 and ref[0] in inner.input_ids:
+            return inner.input_ids.index(ref[0])
+        return None
+
+    for nid in order:
+        if nid not in g.nodes:
+            continue
+        node = g.nodes[nid]
+        if isinstance(node, InputNode):
+            continue
+
+        if isinstance(node, OutputNode):
+            e = g.in_edge(nid, 0)
+            pr = pairs.get((e.src, e.sp))
+            if pr is None:
+                continue
+            if top:
+                rewire_port(nid, 0, materialize(pr))
+            else:
+                out_pairs[g.output_ids.index(nid)] = pr
+            continue
+
+        in_refs = [(e.src, e.sp) for e in g.in_edges(nid)]
+        arg_pairs = [pairs.get(r) for r in in_refs]
+
+        if isinstance(node, FuncNode):
+            op = node.op
+            if (isinstance(op, O.Elementwise) and _top_level_exp(op.expr)
+                    and types[(nid, 0)].item == O.BLOCK):
+                # the producer: exp(arg) -> (exp(arg - rowmax), rowmax)
+                changed = True
+                mat_args(nid, arg_pairs)
+                in_refs = [(e.src, e.sp) for e in g.in_edges(nid)]
+                inner_op = O.Elementwise(op.expr.strip()[4:-1], op.n_in,
+                                         dict(op.consts))
+                arg = add_func(inner_op, *in_refs)
+                m = add_func(O.ROW_MAX, arg)
+                shifted = add_func(O.ROW_SHIFT, arg, neg(m))
+                s = add_func(O.ew("exp(a0)"), shifted)
+                g.rewire_consumers((nid, 0), s)
+                g.remove_node(nid)
+                pairs[s] = _Pair(s, m, VType((), O.VECTOR))
+                continue
+            if not any(arg_pairs):
+                continue
+            # pair-consuming operators (appendix algebra)
+            if _is_recip(op) and arg_pairs[0] is not None:
+                pr = arg_pairs[0]
+                rewire_port(nid, 0, pr.s)
+                pairs[(nid, 0)] = _Pair((nid, 0), neg(pr.t), pr.t_vt)
+            elif _is_add(op) and all(arg_pairs):
+                p1, p2 = arg_pairs
+                z = add_func(O.ew("maximum(a0,a1)", 2), p1.t, p2.t)
+                for port, pr in enumerate((p1, p2)):
+                    f = add_func(O.ew("exp(a0-a1)", 2), pr.t, z)
+                    if vt(pr.s).item == O.BLOCK \
+                            and pr.t_vt.item == O.VECTOR:
+                        sc = add_func(O.ROW_SCALE, pr.s, f)
+                    else:
+                        sc = add_func(O.EW_MUL.clone(), pr.s, f)
+                    rewire_port(nid, port, sc)
+                pairs[(nid, 0)] = _Pair((nid, 0), z, vt(z))
+            elif _is_mul(op) and any(arg_pairs):
+                for port, pr in enumerate(arg_pairs):
+                    if pr is not None:
+                        rewire_port(nid, port, pr.s)
+                t, tv = t_sum(
+                    arg_pairs[0].t if arg_pairs[0] else None,
+                    arg_pairs[1].t if arg_pairs[1] else None,
+                    arg_pairs[0].t_vt if arg_pairs[0] else None,
+                    arg_pairs[1].t_vt if arg_pairs[1] else None)
+                if t is not None:
+                    pairs[(nid, 0)] = _Pair((nid, 0), t, tv)
+            elif isinstance(op, O.RowSum) and arg_pairs[0] is not None:
+                pr = arg_pairs[0]
+                rewire_port(nid, 0, pr.s)
+                pairs[(nid, 0)] = _Pair((nid, 0), pr.t, pr.t_vt)
+            elif isinstance(op, O.Dot) and arg_pairs[0] is not None:
+                pr = arg_pairs[0]
+                rewire_port(nid, 0, pr.s)
+                if arg_pairs[1] is not None:
+                    rewire_port(nid, 1, materialize(arg_pairs[1]))
+                pairs[(nid, 0)] = _Pair((nid, 0), pr.t, pr.t_vt)
+            elif isinstance(op, O.RowScale):
+                pa, pc = arg_pairs
+                if pa is not None:
+                    rewire_port(nid, 0, pa.s)
+                if pc is not None:
+                    rewire_port(nid, 1, pc.s)
+                t, tv = t_sum(pa.t if pa else None, pc.t if pc else None,
+                              pa.t_vt if pa else None,
+                              pc.t_vt if pc else None)
+                if t is not None:
+                    pairs[(nid, 0)] = _Pair((nid, 0), t, tv)
+            else:
+                # no pair semantics for this op: collapse the pairs
+                mat_args(nid, arg_pairs)
+            continue
+
+        if isinstance(node, ReduceNode):
+            pr = arg_pairs[0]
+            if pr is None:
+                continue
+            if node.op != "+":
+                raise NotImplementedError(
+                    f"cannot stabilize reduce[{node.op}] over a pair")
+            changed = True
+            svt, tvt = vt(pr.s), pr.t_vt
+            # two-pass streaming sum: z = max over the exponent list,
+            # then sum the rescaled significands s_i * e^{t_i - z}
+            zid = g.add(ReduceNode(O.REDUCE_MAX))
+            g.connect(pr.t, (zid, 0))
+            z_vt = VType(tvt.dims[1:], tvt.item)
+            new_vt[(zid, 0)] = z_vt
+            inner = _rescale_graph(svt.dims[1:], svt.item, tvt.item)
+            mid = g.add(MapNode(svt.dims[0], inner,
+                                [True, True, False], [None]))
+            g.connect(pr.s, (mid, 0))
+            g.connect(pr.t, (mid, 1))
+            g.connect((zid, 0), (mid, 2))
+            new_vt[(mid, 0)] = svt
+            rewire_port(nid, 0, (mid, 0))
+            pairs[(nid, 0)] = _Pair((nid, 0), (zid, 0), z_vt)
+            continue
+
+        if isinstance(node, MiscNode):
+            mat_args(nid, arg_pairs)
+            continue
+
+        if isinstance(node, MapNode):
+            inner = node.inner
+            inner_in_ids = list(inner.input_ids)
+            inner_pairs: Dict[Ref, _Pair] = {}
+            for p, pr in enumerate(arg_pairs):
+                if pr is None:
+                    continue
+                changed = True
+                iid = inner_in_ids[p]
+                rewire_port(nid, p, pr.s)
+                t_vt_in = pr.t_vt.strip() if node.mapped[p] else pr.t_vt
+                tid = inner.add(InputNode(
+                    f"{inner.nodes[iid].name}_t", t_vt_in))
+                node.mapped.append(node.mapped[p])
+                g.connect(pr.t, (nid, node.n_in() - 1))
+                inner_pairs[(iid, 0)] = _Pair((iid, 0), (tid, 0), t_vt_in)
+            inner_out, ch = _stab_graph(inner, inner_pairs, top=False)
+            changed = changed or ch
+            if not inner_out:
+                if ch:
+                    _prune_dead(inner)
+                continue
+            # expose the inner exponents: one out-port per distinct
+            # (exponent ref, reduced?) — reduced pair ports become
+            # "+@k" carries against a shared "max" port k
+            t_out: Dict[Tuple[Ref, bool], int] = {}
+            for p_out in sorted(inner_out):
+                pr = inner_out[p_out]
+                red = node.reduced[p_out]
+                if red is not None and red != O.REDUCE_ADD:
+                    raise NotImplementedError(
+                        f"cannot stabilize reduced tag {red!r}")
+                p_in = inner_input_port(inner, pr.t)
+                if p_in is not None and (not node.mapped[p_in]
+                                         or red is None):
+                    # exponent passes straight through from a map input:
+                    # broadcast inputs are loop-invariant (so a "+"
+                    # carry stays plain), and a mapped input feeding a
+                    # plain list port already has its outer list —
+                    # either way consumers reuse the outer ref instead
+                    # of a new pass-through out-port
+                    e_in = g.in_edge(nid, p_in)
+                    outer_t = (e_in.src, e_in.sp)
+                    pairs[(nid, p_out)] = _Pair(
+                        (nid, p_out), outer_t, vt(outer_t))
+                    continue
+                key = (pr.t, red is not None)
+                if key not in t_out:
+                    toid = inner.add(OutputNode(f"t{len(node.reduced)}"))
+                    inner.connect(pr.t, (toid, 0))
+                    node.reduced.append(
+                        O.REDUCE_MAX if red is not None else None)
+                    t_out[key] = len(node.reduced) - 1
+                k = t_out[key]
+                if red is not None:
+                    node.reduced[p_out] = O.rescaled_add(k)
+                    outer_tvt = pr.t_vt
+                else:
+                    outer_tvt = pr.t_vt.wrap(node.dim)
+                new_vt[(nid, k)] = outer_tvt
+                pairs[(nid, p_out)] = _Pair((nid, p_out), (nid, k),
+                                            outer_tvt)
+            if ch:
+                # safe only now: the t out-ports wired above consume
+                # nodes that looked dead at the end of the recursion
+                _prune_dead(inner)
+            continue
+
+        raise TypeError(node)
+
+    return out_pairs, changed

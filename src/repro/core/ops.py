@@ -135,6 +135,24 @@ class RowSum(Op):
         return a.sum(axis=1)
 
 
+class RowMax(Op):
+    """r = a.max(axis=1) — per-row maxima.
+
+    Introduced by the numerical-safety pass (``numerics.stabilize``):
+    the shared row-wise exponent of a significand–exponent pair is the
+    row max of the exponentiation argument."""
+
+    name = "row_max"
+    n_in = 1
+
+    def result_kind(self, kinds):
+        assert kinds == (BLOCK,), kinds
+        return VECTOR
+
+    def apply(self, xp, a):
+        return a.max(axis=1)
+
+
 # Large-negative fill for masked attention scores: survives a subsequent
 # scale multiply (scale * NEG_MASK is still << float32 min for exp) and
 # exp() maps it to exactly 0.0 in float32.
@@ -246,6 +264,104 @@ def compose_elementwise(u: Elementwise, v: Elementwise, dport: int) -> Elementwi
 
 
 # ---------------------------------------------------------------------------
+# Serial-map reduction tags (MapNode.reduced vocabulary)
+# ---------------------------------------------------------------------------
+# Historically the only accumulating tag was "+".  The numerical-safety
+# pass (numerics.stabilize) adds two more, lowered by every backend:
+#
+#   "max"   — running elementwise maximum (init -inf): the shared
+#             exponent carry of a significand–exponent pair.
+#   "+@k"   — a rescaled additive carry *coupled* to the "max" port k of
+#             the same map: on each step, with z_old the max carry
+#             before the step, m the step's port-k value and
+#             z_new = max(z_old, m),
+#
+#                 acc' = acc * exp(z_old - z_new) + step * exp(m - z_new)
+#
+#             — exactly Flash Attention's rescale-on-new-max recurrence.
+#
+# Tags participate in Graph.canonical(), so stabilized programs
+# fingerprint (and therefore cache) differently from raw ones.
+
+REDUCE_ADD = "+"
+REDUCE_MAX = "max"
+
+_RESCALED_RE = re.compile(r"^\+@(\d+)$")
+
+
+def rescaled_add(port: int) -> str:
+    """The reduced tag of an additive carry rescaled against the "max"
+    out-port ``port`` of the same map."""
+    return f"+@{port}"
+
+
+def rescaled_ref(tag) -> "int | None":
+    """The coupled max-port index of a ``"+@k"`` tag, else ``None``."""
+    if not isinstance(tag, str):
+        return None
+    m = _RESCALED_RE.match(tag)
+    return int(m.group(1)) if m else None
+
+
+def bcast_to(xp, f, like):
+    """Broadcast a row-wise factor against a higher-rank significand by
+    appending trailing singleton axes (uniform rank rule: the leading
+    axis is the row axis at every rank)."""
+    f = xp.asarray(f)
+    extra = xp.asarray(like).ndim - f.ndim
+    if extra > 0:
+        return f.reshape(f.shape + (1,) * extra)
+    return f
+
+
+def serial_accum_step(collected, vals, tags, xp):
+    """Advance one step of a serial map's (possibly coupled) carries.
+
+    ``collected[p]`` is the carry for out-port ``p`` (``None`` before the
+    first step; a python list for non-reduced ports), ``vals[p]`` the
+    step's port value, ``tags[p]`` the reduced tag.  Mutates and returns
+    ``collected``.  Shared by the interpreter and the Pallas grouped
+    lowering so the "max"/"+@k" semantics exist in exactly one place.
+    """
+    z_old: Dict[int, Any] = {}
+    z_new: Dict[int, Any] = {}
+    for p, r in enumerate(tags):
+        if r == REDUCE_MAX:
+            z_old[p] = collected[p]
+            z_new[p] = (vals[p] if collected[p] is None
+                        else xp.maximum(collected[p], vals[p]))
+    for p, r in enumerate(tags):
+        if r is None:
+            collected[p].append(vals[p])
+        elif r == REDUCE_ADD:
+            collected[p] = (vals[p] if collected[p] is None
+                            else collected[p] + vals[p])
+        elif r == REDUCE_MAX:
+            collected[p] = z_new[p]
+        else:
+            k = rescaled_ref(r)
+            if k is None:
+                raise NotImplementedError(f"reduced tag {r!r}")
+            step = vals[p] * bcast_to(xp, xp.exp(vals[k] - z_new[k]),
+                                      vals[p])
+            if collected[p] is None:
+                collected[p] = step
+            else:
+                collected[p] = (
+                    collected[p]
+                    * bcast_to(xp, xp.exp(z_old[k] - z_new[k]),
+                               collected[p])
+                    + step)
+    return collected
+
+
+def plain_serial_tags(tags) -> bool:
+    """True when every accumulating tag is the legacy "+" (the fast
+    uncoupled path every backend had before stabilization)."""
+    return all(r is None or r == REDUCE_ADD for r in tags)
+
+
+# ---------------------------------------------------------------------------
 # Shared instances / convenience constructors
 # ---------------------------------------------------------------------------
 
@@ -254,6 +370,7 @@ OUTER = Outer()
 ROW_SCALE = RowScale()
 ROW_SHIFT = RowShift()
 ROW_SUM = RowSum()
+ROW_MAX = RowMax()
 CAUSAL_MASK = CausalMask()
 
 

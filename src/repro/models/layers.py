@@ -189,10 +189,10 @@ def attention_apply(p, x, cfg: ModelConfig, *, causal=True,
         # fusion-derived flash kernel via the pipeline driver — causal
         # (decoder prefill) and GQA included; no XLA fallback.  Two
         # hand-kernel knobs do not apply here: attn_p_half/unroll_scans
-        # belong to kernels/flash_attention.py.  The generated kernel
-        # uses the paper's raw-exp softmax (safe for |logit| < ~88; the
-        # appendix's online-softmax pass is a ROADMAP item for codegen —
-        # today run_stabilized implements it in the interpreter only).
+        # belong to kernels/flash_attention.py.  The driver stabilizes
+        # softmax-bearing programs by default (numerics.stabilize: the
+        # online-softmax rewrite, compiled on every backend), so the
+        # generated kernel is finite at any logit magnitude.
         o = _attention_pipeline(q, k, v, 1.0 / cfg.d_head ** 0.5,
                                 cfg.pipeline_backend, causal=causal)
     else:

@@ -50,7 +50,11 @@ _SCHEMA_VERSION = 3  # v3: per-kernel ids + launch/residency provenance
 # v5: compute-aware grouped selection (pallas snapshots rank by
 # sum-of-group-costs under a schema-2 calibration profile with work
 # coefficients; old plans may carry a differently-selected snapshot).
-CODEGEN_VERSION = 5
+# v6: graph-level numerical stabilization (``numerics.stabilize``
+# rewrites top-level-exp programs into significand/exponent pairs with
+# rescaled serial carries; stabilized snapshots have different shapes,
+# costs, and kernels than anything a v5 build selected).
+CODEGEN_VERSION = 6
 
 DEFAULT_MAX_DISK_BYTES = 1 << 30  # 1 GiB
 
@@ -110,6 +114,9 @@ class CachePlan:
     # cross-region values kept VMEM-resident
     launches: Optional[int] = None
     resident_edges: Optional[int] = None
+    # True when the snapshots were rewritten by ``numerics.stabilize``
+    # before selection (snapshot_index addresses the stabilized list)
+    stabilized: bool = False
 
     def to_json(self) -> Dict[str, Any]:
         d = asdict(self)
@@ -135,7 +142,8 @@ class CachePlan:
                    tuple(str(k) for k in kids) if kids is not None
                    else None,
                    int(launches) if launches is not None else None,
-                   int(resident) if resident is not None else None)
+                   int(resident) if resident is not None else None,
+                   bool(d.get("stabilized", False)))
 
 
 @dataclass

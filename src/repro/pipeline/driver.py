@@ -51,6 +51,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import calibrate as CAL
+from repro.core import numerics as NU
 from repro.core import selection as SEL
 from repro.core.fusion import FusionTrace, fuse
 from repro.core.graph import Graph
@@ -75,6 +76,9 @@ class CompiledKernel:
     cost: float                       # predicted traffic cost (selected)
     initial_cost: float               # same model on the unfused program
     cache_hit: Optional[str]          # None | "memory" | "disk"
+    # True when numerics.stabilize rewrote the snapshots before
+    # selection/lowering (online-softmax-safe exp handling)
+    stabilized: bool
     in_names: List[str]
     out_names: List[str]
     _fn: Callable[[Dict[str, Any]], Dict[str, Any]] = None  # type: ignore
@@ -146,11 +150,16 @@ def _lower_py(g: Graph, dims: Dict[str, int]):
     return call
 
 
-def _lower_jax(g: Graph, dims: Dict[str, int], jit: bool):
+def _lower_jax(g: Graph, dims: Dict[str, int], jit):
+    """``jit`` is ``True`` (whole-program ``jax.jit``), ``False`` (eager),
+    or ``"per-op"``: every top-level operator jitted separately and
+    dispatched from python — the honest launch-per-operator unfused
+    baseline (whole-program jit would let XLA fuse the graph itself)."""
     import jax
     from repro.core.codegen_jax import compile_program
     in_info, out_info = _io_info(g)
-    prog = compile_program(g)
+    per_op = jit == "per-op"
+    prog = compile_program(g, per_op_jit=per_op)
 
     def fn(*merged):
         stacked = [P.to_stacked(a, vt, dims)
@@ -159,7 +168,7 @@ def _lower_jax(g: Graph, dims: Dict[str, int], jit: bool):
         return tuple(P.from_stacked(o, vt, dims)
                      for (_, vt), o in zip(out_info, outs))
 
-    if jit:
+    if jit and not per_op:
         fn = jax.jit(fn)
 
     def call(inputs: Dict[str, Any]) -> Dict[str, Any]:
@@ -234,10 +243,11 @@ def _lower_pallas(g: Graph, dims: Dict[str, int],
 def _measure_harness(graph: Graph,
                      dim_candidates: Dict[str, Sequence[int]], *,
                      backend: str, blocks: Optional[Dict[str, int]],
-                     interpret, jit: bool,
+                     interpret, jit,
                      item_bytes: Optional[Dict[str, int]],
                      profile, fused: bool, cache: KernelCache,
-                     repeats: int, group: bool = True) -> Callable:
+                     repeats: int, group: bool = True,
+                     stabilize: bool = False) -> Callable:
     """The ``measure`` callback ``selection.autotune(objective=
     "measured")`` calls for each top-K survivor: compile the candidate
     through this same driver (so the in-process kernel cache absorbs
@@ -274,7 +284,7 @@ def _measure_harness(graph: Graph,
         # notably interpret mode (orders of magnitude slower) and the
         # repeat count
         mkey = (fp, dkey, backend, dev, tuple(sorted(total.items())),
-                bool(jit), fused, interpret, repeats, group)
+                jit, fused, interpret, repeats, group, stabilize)
 
         def thunk() -> float:
             kern = compile(graph, dict(sel.dims), backend=backend,
@@ -282,7 +292,7 @@ def _measure_harness(graph: Graph,
                                    else blocks),
                            item_bytes=item_bytes, fused=fused,
                            interpret=interpret, jit=jit, profile=profile,
-                           cache=cache, group=group)
+                           cache=cache, group=group, stabilize=stabilize)
             kernels[dkey] = kern
             inputs = T.synth_inputs(graph, sel.dims, cand_blocks)
             return T.time_callable(kern, inputs, warmup=1,
@@ -301,7 +311,8 @@ def compile(graph: Graph, dims: Optional[Dict[str, int]] = None, *,
             item_bytes: Optional[Dict[str, int]] = None,
             fused: bool = True,
             interpret=None,
-            jit: bool = True,
+            jit=True,
+            stabilize: Optional[bool] = None,
             cache: Optional[KernelCache] = None,
             autotune: str = "analytic",
             profile: Optional[CAL.CalibrationProfile] = None,
@@ -314,7 +325,19 @@ def compile(graph: Graph, dims: Optional[Dict[str, int]] = None, *,
     ``dim_candidates`` (a per-dim sweep -> ``selection.autotune``, which
     also picks the dims) must be given.  ``fused=False`` skips the fusion
     algorithm — the unfused Table-2 program compiles as-is; that is the
-    benchmark baseline.
+    benchmark baseline.  ``jit`` (jax backend) additionally accepts
+    ``"per-op"``: each top-level operator is jitted separately and
+    dispatched from python, the launch-per-operator unfused baseline.
+
+    ``stabilize`` controls the graph-level numerical-safety rewrite
+    (``numerics.stabilize``): top-level ``exp`` producers become
+    significand/exponent pairs with running-max rescaled serial carries
+    (online softmax), so attention stays finite at any logit magnitude.
+    ``None`` (the default) auto-enables it exactly when the program
+    contains a block-typed top-level ``exp``
+    (``numerics.needs_stabilization``) — attention programs get it,
+    exp-free programs compile unchanged.  The flag is part of the cache
+    key: stabilized and raw kernels never alias.
 
     ``group`` (pallas backend) controls region-group megakernel
     lowering: by default compatible regions of the selected snapshot
@@ -357,6 +380,11 @@ def compile(graph: Graph, dims: Optional[Dict[str, int]] = None, *,
         profile = CAL.load_or_default(cache.root, backend=backend,
                                       device_kind=CAL.device_kind())
 
+    # default: stabilize exactly the programs that need it (block-typed
+    # top-level exp, i.e. softmax-bearing programs like attention)
+    stab = (NU.needs_stabilization(graph) if stabilize is None
+            else bool(stabilize))
+
     # autotune keys embed the full candidate sweep, so two sweeps over the
     # same dim names but different candidate sets never collide
     key_dims = (dims if dims is not None
@@ -364,8 +392,10 @@ def compile(graph: Graph, dims: Optional[Dict[str, int]] = None, *,
     # every option that changes the emitted kernel or the selection plan
     # is part of the key, else a later compile is served a stale kernel
     opts: tuple = ()
+    if stab:
+        opts += (("stabilize", True),)
     if backend == "jax":
-        opts += (("jit", bool(jit)),)
+        opts += (("jit", jit if jit == "per-op" else bool(jit)),)
     if backend == "pallas":
         from repro.core import regions as REG
         from repro.core.codegen_pallas import resolve_interpret
@@ -412,25 +442,33 @@ def compile(graph: Graph, dims: Optional[Dict[str, int]] = None, *,
             snaps = fuse(graph, trace)
         else:
             snaps = [graph.clone()]
+        # stabilization rewrites every snapshot (and the unfused base
+        # used for init_cost) BEFORE selection, so the cost model ranks
+        # the graphs that will actually lower — exponent-vector edges
+        # and rescale work included
+        base = graph
+        if stab:
+            snaps = [NU.stabilize(s) for s in snaps]
+            base = NU.stabilize(graph)
         if dim_candidates is not None:
             if autotune == "measured":
                 measure = _measure_harness(
                     graph, dim_candidates, backend=backend, blocks=blocks,
                     interpret=interpret, jit=jit, item_bytes=item_bytes,
                     profile=profile, fused=fused, cache=cache,
-                    repeats=measure_repeats, group=group)
-                sel = SEL.autotune(graph, dim_candidates, item_bytes,
+                    repeats=measure_repeats, group=group, stabilize=stab)
+                sel = SEL.autotune(base, dim_candidates, item_bytes,
                                    snapshots=snaps, objective="measured",
                                    profile=profile, measure=measure,
                                    top_k=top_k, group=sel_group,
                                    blocks=blocks)
                 timings = sel.timings
             else:
-                sel = SEL.autotune(graph, dim_candidates, item_bytes,
+                sel = SEL.autotune(base, dim_candidates, item_bytes,
                                    snapshots=snaps, profile=profile,
                                    group=sel_group, blocks=blocks)
         else:
-            sel = SEL.select(graph, dims, item_bytes, snapshots=snaps,
+            sel = SEL.select(base, dims, item_bytes, snapshots=snaps,
                              profile=profile, group=sel_group,
                              blocks=blocks)
         selected_graph = snaps[sel.snapshot_index]
@@ -451,21 +489,25 @@ def compile(graph: Graph, dims: Optional[Dict[str, int]] = None, *,
                 resident = gplan.n_resident_edges
         # the unfused program priced under the SAME objective as the
         # winner, so predicted_traffic_reduction compares like with like
-        init_cost = SEL.objective_cost(graph, sel.dims, item_bytes,
+        init_cost = SEL.objective_cost(base, sel.dims, item_bytes,
                                        profile, group=sel_group,
                                        blocks=blocks)
         plan = CachePlan(sel.snapshot_index, sel.dims, sel.cost,
                          sel.costs, init_cost,
                          region_costs=rcosts, measured_s=sel.measured_s,
                          kernel_ids=kids, launches=launches,
-                         resident_edges=resident)
+                         resident_edges=resident, stabilized=stab)
         cache.put_plan(key, plan, selected_graph)
         cache_hit = None
     else:
         cache_hit = "disk"
         if selected_graph is None:
-            # plan-only disk entry (un-picklable graph): re-fuse
+            # plan-only disk entry (un-picklable graph): re-fuse and
+            # re-apply the same deterministic stabilization pass so
+            # snapshot_index addresses the graph the plan described
             snaps = fuse(graph) if fused else [graph.clone()]
+            if stab:
+                snaps = [NU.stabilize(s) for s in snaps]
             selected_graph = snaps[plan.snapshot_index]
 
     use_dims = plan.dims
@@ -524,6 +566,7 @@ def compile(graph: Graph, dims: Optional[Dict[str, int]] = None, *,
         blocks=dict(blocks) if blocks else None,
         snapshot_index=plan.snapshot_index, cost=plan.cost,
         initial_cost=plan.initial_cost, cache_hit=cache_hit,
+        stabilized=stab,
         in_names=[n for n, _ in in_info],
         out_names=[n for n, _ in out_info], _fn=fn,
         lowering_report=report, region_costs=plan.region_costs,

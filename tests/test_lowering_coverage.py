@@ -16,6 +16,7 @@ import pytest
 from repro import pipeline
 from repro.core import array_program as AP
 from repro.core import codegen_pallas as CP
+from repro.core import numerics as NU
 from repro.core import selection as SEL
 from repro.core.fusion import fuse
 from repro.core.interpreter import run as interp_run
@@ -100,8 +101,16 @@ def test_pipeline_lowers_selected_snapshot(name, rng):
     # selection's choice is what lowered: the driver no longer rewrites
     # snapshot_index/cost after the fact.  The pallas backend selects
     # under the grouped, residency-aware objective — the cost of the
-    # kernels the region-group lowering actually emits
-    sel = SEL.select(g, dims, group=True, blocks=blocks)
+    # kernels the region-group lowering actually emits.  The driver
+    # stabilizes softmax-bearing snapshots before selection, so mirror
+    # that here: same snapshots in, same choice out
+    snaps = fuse(g)
+    base = g
+    if NU.needs_stabilization(g):
+        snaps = [NU.stabilize(s) for s in snaps]
+        base = NU.stabilize(g)
+    sel = SEL.select(base, dims, snapshots=snaps, group=True,
+                     blocks=blocks)
     assert kern.snapshot_index == sel.snapshot_index
     assert kern.cost == sel.cost
     # per-kernel traffic attribution matches the emitted kernels (a

@@ -5,11 +5,12 @@ import warnings
 import numpy as np
 import pytest
 
+from repro.core import ops as O
 from repro.core.blocks import merge
 from repro.core.fusion import fuse
 from repro.core.interpreter import run
 from repro.core.numerics import (SEPair, _top_level_exp, pair_add,
-                                 run_stabilized)
+                                 run_stabilized, stabilized_apply)
 from conftest import make_attention_case
 
 
@@ -90,3 +91,97 @@ def test_stabilized_causal_survives_huge_logits(rng):
         stab = merge(run_stabilized(snap, inputs, dims)["O"])
         assert np.isfinite(stab).all()
         np.testing.assert_allclose(stab, ref, rtol=1e-9, atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Expression matching: whitespace- and commutativity-robust (regression:
+# the rules used to compare raw expr strings, so "a1+a0" or "1 / a0"
+# silently fell off the pair algebra and materialized early)
+# ---------------------------------------------------------------------------
+
+def _pair(rng, rows=4, cols=8):
+    return SEPair(rng.normal(size=(rows, cols)), rng.normal(size=rows))
+
+
+@pytest.mark.parametrize("expr", ["a0+a1", "a1+a0", "a0 +a1", " a0 + a1 "])
+def test_add_matching_is_canonical(expr, rng):
+    a, b = _pair(rng), _pair(rng)
+    got = stabilized_apply(O.ew(expr, 2), np, a, b)
+    assert isinstance(got, SEPair), expr
+    np.testing.assert_allclose(got.materialize(np),
+                               a.materialize(np) + b.materialize(np),
+                               rtol=1e-12)
+
+
+@pytest.mark.parametrize("expr", ["a0*a1", "a1*a0", "a0 * a1"])
+def test_mul_matching_is_canonical(expr, rng):
+    a, b = _pair(rng), _pair(rng)
+    got = stabilized_apply(O.ew(expr, 2), np, a, b)
+    assert isinstance(got, SEPair), expr
+    np.testing.assert_allclose(got.materialize(np),
+                               a.materialize(np) * b.materialize(np),
+                               rtol=1e-12)
+
+
+@pytest.mark.parametrize("expr", ["1/a0", "1 / a0", " 1/a0 "])
+def test_recip_matching_ignores_whitespace(expr, rng):
+    a = _pair(rng)
+    got = stabilized_apply(O.ew(expr), np, a)
+    assert isinstance(got, SEPair), expr
+    np.testing.assert_allclose(got.materialize(np),
+                               1.0 / a.materialize(np), rtol=1e-12)
+
+
+def test_canon_expr_only_swaps_flat_commutative():
+    from repro.core.numerics import _canon_expr
+    assert _canon_expr("a1+a0") == "a0+a1"
+    assert _canon_expr("a1*a0") == "a0*a1"
+    assert _canon_expr("a0-a1") == "a0-a1"          # not commutative
+    assert _canon_expr("a1+a0*a2") == "a1+a0*a2"    # not a flat 2-op
+    assert _canon_expr("exp( a0 )") == "exp(a0)"
+
+
+# ---------------------------------------------------------------------------
+# Uniform rank rule: 1-D significands keep per-element exponents
+# (regression: the old rowmax collapsed rank-1 values to one scalar max,
+# so a vector pair's exponent lost its per-row resolution)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(6,), (4, 8), (3, 5, 7), ()])
+def test_pair_add_mixed_plain_any_rank(shape, rng):
+    """pair_add(pair, plain) at every rank: the plain side is wrapped
+    with a zero exponent of the pair's row shape and the result matches
+    dense addition."""
+    from repro.core.numerics import _rowmax
+    s = rng.normal(size=shape)
+    t = rng.normal(size=np.shape(_rowmax(np, s)))
+    pair = SEPair(s, t)
+    plain = rng.normal(size=shape)
+    got = pair_add(np, pair, plain)
+    assert np.shape(got.t) == np.shape(t)
+    np.testing.assert_allclose(got.materialize(np),
+                               pair.materialize(np) + plain, rtol=1e-12)
+    # and symmetrically
+    got2 = pair_add(np, plain, pair)
+    np.testing.assert_allclose(got2.materialize(np),
+                               got.materialize(np), rtol=1e-12)
+
+
+def test_vector_exp_keeps_per_element_exponent(rng):
+    """exp over a 1-D value: each element is its own row, so the
+    exponent is the argument itself and the significand is all-ones —
+    no cross-element max contaminates the pair."""
+    v = rng.normal(size=8) * 500.0   # overflows naive float64 exp pairs
+    got = stabilized_apply(O.ew("exp(a0)"), np, v)
+    assert isinstance(got, SEPair)
+    np.testing.assert_allclose(np.asarray(got.s), np.ones(8))
+    np.testing.assert_allclose(np.asarray(got.t), v)
+
+
+def test_rowmax_reduces_all_trailing_axes(rng):
+    from repro.core.numerics import _rowmax
+    a = rng.normal(size=(3, 4, 5))
+    np.testing.assert_allclose(_rowmax(np, a), a.max(axis=(1, 2)))
+    b = rng.normal(size=(6,))
+    np.testing.assert_allclose(_rowmax(np, b), b)
+    assert np.shape(_rowmax(np, 3.0)) == ()

@@ -1,0 +1,104 @@
+"""The graph-level safety rewrite (``numerics.stabilize``).
+
+Unlike ``run_stabilized`` (interpreter-only pair semantics), the rewrite
+must produce an ordinary block program — explicit significand/exponent
+edges, ``row_max``/``row_shift`` producers, and ``"max"``/``"+@k"``
+serial carries — that the interpreter and every codegen execute without
+any pair representation at runtime.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import array_program as AP
+from repro.core import ops as O
+from repro.core.blocks import merge
+from repro.core.fusion import fuse
+from repro.core.graph import MapNode
+from repro.core.interpreter import run
+from repro.core.numerics import (needs_stabilization, run_stabilized,
+                                 stabilize)
+from conftest import make_attention_case, make_layernorm_case, \
+    make_swiglu_case
+
+
+def test_needs_stabilization_detects_softmax_programs():
+    assert needs_stabilization(AP.attention_program(0.125))
+    assert needs_stabilization(AP.causal_attention_program(0.125))
+    assert needs_stabilization(
+        AP.gqa_attention_program(0.125, causal=True))
+    # fused snapshots still contain the (nested) exp producer
+    for s in fuse(AP.attention_program(0.125)):
+        assert needs_stabilization(s)
+
+
+def test_needs_stabilization_skips_exp_free_programs():
+    assert not needs_stabilization(AP.layernorm_matmul_program(64.0))
+    # swiglu's exp lives inside sigmoid (not top-level): raw exp there
+    # never overflows because its argument is bounded by the gate input
+    assert not needs_stabilization(AP.rmsnorm_ffn_swiglu_program(64.0))
+
+
+def test_stabilize_is_identity_on_exp_free_graphs(rng):
+    for case in (make_layernorm_case(rng), make_swiglu_case(rng)):
+        assert stabilize(case.graph) is case.graph
+
+
+def test_stabilize_changes_fingerprint_and_validates(rng):
+    g = make_attention_case(rng).graph
+    g2 = stabilize(g)
+    assert g2 is not g
+    assert g2.fingerprint() != g.fingerprint()
+    g2.validate()
+    # the original is untouched (stabilize clones)
+    assert not any(
+        r is not None and O.rescaled_ref(r) is not None
+        for nid, n in g.nodes.items() if isinstance(n, MapNode)
+        for r in n.reduced)
+
+
+def _serial_tags(g):
+    tags = []
+    for n in g.nodes.values():
+        if isinstance(n, MapNode):
+            if n.serial:
+                tags.extend(r for r in n.reduced if r is not None)
+            tags.extend(_serial_tags(n.inner))
+    return tags
+
+
+def test_fused_attention_grows_online_softmax_carries(rng):
+    """The fully-fused snapshot's serial spine gains a running-max carry
+    with its additive ports retagged to rescale against it."""
+    snap = fuse(make_attention_case(rng).graph)[-1]
+    tags = _serial_tags(stabilize(snap))
+    assert O.REDUCE_MAX in tags
+    rescaled = [t for t in tags if O.rescaled_ref(t) is not None]
+    assert rescaled, tags
+    k = O.rescaled_ref(rescaled[0])
+    assert all(O.rescaled_ref(t) == k for t in rescaled)
+
+
+@pytest.mark.parametrize("snap_i", [0, -1])
+def test_stabilized_graph_interprets_to_oracle_at_huge_logits(snap_i,
+                                                              rng):
+    """Every fusion level of the rewritten program, run by the PLAIN
+    interpreter, matches the pair-semantics oracle where the raw
+    program overflows."""
+    case = make_attention_case(rng, logit_scale=40.0)
+    snap = fuse(case.graph)[snap_i]
+    oracle = merge(run_stabilized(snap, case.inputs, case.dims)["O"])
+    got = merge(run(stabilize(snap), case.inputs, case.dims)["O"])
+    assert np.isfinite(got).all()
+    np.testing.assert_allclose(got, oracle, rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(got, case.ref, rtol=1e-9, atol=1e-9)
+
+
+def test_stabilized_graph_safe_range_exact(rng):
+    """In the safe range the rewrite is numerically equivalent to the
+    raw program (same sums, only max-shifted)."""
+    case = make_attention_case(rng)
+    for snap in fuse(case.graph):
+        raw = merge(run(snap, case.inputs, case.dims)["O"])
+        got = merge(run(stabilize(snap), case.inputs, case.dims)["O"])
+        np.testing.assert_allclose(got, raw, rtol=1e-12, atol=1e-13)
