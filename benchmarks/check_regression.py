@@ -31,6 +31,16 @@ run against the committed baseline and exits non-zero if
     fusion vs genuinely-no-fusion, not vs XLA's own fusion), or
   * a baseline row is missing from the fresh run.
 
+``serve_*`` rows (from ``benchmarks/serve_bench.py``) are gated too:
+the deterministic scheduler counters (completed/rejected/stalled
+requests, warmup compile count) are pinned **exactly** — the synthetic
+trace is seeded, so any drift is a scheduler behaviour change — while
+**decode recompiles** and **Pallas fallbacks** must be zero on every
+current serve row, pinned or not (one persistent megakernel per shape
+bucket is the whole point of the serving tentpole).  Throughput
+(``tokens_per_s``) gets the same generous same-machine treatment as the
+speedup ratio: only a >1.5x collapse below the pin fails.
+
 Absolute wall-clock columns are never gated — CI runners are too noisy;
 the tightly-gated quantities are deterministic functions of the cost
 model and the lowering, and the only timing key gated (the speedup
@@ -56,6 +66,12 @@ SPEARMAN_TOLERANCE = 0.5  # fail when region rank agreement drops by more
 GATED_KEYS = ("pred_traffic_reduction", "pallas_regions",
               "pallas_fallbacks", "launches", "resident_edges", "speedup",
               "region_spearman")
+# serving rows: exact pins for the deterministic scheduler counters,
+# ratio-gated throughput, and the zero-recompile / zero-fallback pins
+GATED_SERVE_KEYS = ("tokens_per_s", "completed", "rejected", "stalled",
+                    "warmup_compiles", "decode_recompiles",
+                    "pallas_fallbacks")
+SERVE_EXACT_KEYS = ("completed", "rejected", "stalled", "warmup_compiles")
 
 
 def _parse_derived(derived: str) -> dict:
@@ -67,12 +83,12 @@ def _parse_derived(derived: str) -> dict:
     return out
 
 
-def _rows(path: str) -> dict:
+def _rows(path: str, prefix: str = "pipeline_") -> dict:
     with open(path) as f:
         data = json.load(f)
     rows = data["rows"] if isinstance(data, dict) else data
     return {r["name"]: _parse_derived(r["derived"]) for r in rows
-            if r["name"].startswith("pipeline_")}
+            if r["name"].startswith(prefix)}
 
 
 def _reduction(derived: dict) -> float:
@@ -86,11 +102,14 @@ def _pin(current_path: str, baseline_path: str) -> int:
     rows = data["rows"] if isinstance(data, dict) else data
     pinned = []
     for r in rows:
-        if not r["name"].startswith("pipeline_"):
+        if r["name"].startswith("pipeline_"):
+            keys = GATED_KEYS
+        elif r["name"].startswith("serve_"):
+            keys = GATED_SERVE_KEYS
+        else:
             continue
         derived = _parse_derived(r["derived"])
-        kept = ";".join(f"{k}={derived[k]}" for k in GATED_KEYS
-                        if k in derived)
+        kept = ";".join(f"{k}={derived[k]}" for k in keys if k in derived)
         pinned.append({"name": r["name"], "derived": kept})
     with open(baseline_path, "w") as f:
         json.dump({"preset": data.get("preset", "ci"), "rows": pinned}, f,
@@ -206,6 +225,38 @@ def main(argv) -> int:
         if fb is not None and fb != "0":
             failures.append(f"{name}: {fb} Pallas region(s) fell back to "
                             "the jax backend")
+    # -- serving rows (benchmarks/serve_bench.py) ---------------------------
+    cur_srv, base_srv = _rows(argv[1], "serve_"), _rows(argv[2], "serve_")
+    for name, base in sorted(base_srv.items()):
+        cur = cur_srv.get(name)
+        if cur is None:
+            failures.append(f"{name}: missing from current run")
+            continue
+        verdict = "ok"
+        base_tps = float(base["tokens_per_s"])
+        cur_tps = float(cur["tokens_per_s"])
+        floor = base_tps / WALL_TOLERANCE
+        if cur_tps < floor:
+            verdict = "THROUGHPUT COLLAPSED"
+            failures.append(
+                f"{name}: {cur_tps:.0f} tokens/s < {floor:.0f} (baseline "
+                f"{base_tps:.0f} / {WALL_TOLERANCE})")
+        # the trace is seeded: scheduler counters are deterministic and
+        # pinned exactly — any drift is a behaviour change, not noise
+        for k in SERVE_EXACT_KEYS:
+            if k in base and k in cur and base[k] != cur[k]:
+                verdict = "SCHEDULER DRIFT"
+                failures.append(f"{name}: {k}={cur[k]} (baseline pinned "
+                                f"{base[k]})")
+        print(f"{name:32s} {base_tps:7.0f}t {cur_tps:7.0f}t  {verdict}")
+    # zero-recompile / zero-fallback pins cover EVERY current serve row,
+    # baseline-listed or new — a steady-state decode step that compiles
+    # (or a region that falls off the megakernel path) always fails
+    for name, cur in sorted(cur_srv.items()):
+        for k in ("decode_recompiles", "pallas_fallbacks"):
+            v = cur.get(k)
+            if v is not None and v != "0":
+                failures.append(f"{name}: {k}={v} (must be 0)")
     extra = sorted(set(current) - set(baseline))
     if extra:
         print("note: rows not in baseline (traffic unchecked, fallbacks "

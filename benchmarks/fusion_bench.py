@@ -137,27 +137,29 @@ def bench_pipeline_example(name: str, repeats: int = 5, bs: int = 16,
         return T.time_callable(kern, inputs, warmup=1,
                                repeats=repeats).median_s * 1e6
 
-    kf = pipeline.compile(g, dims, backend="jax", blocks=blocks,
-                          cache=cache)
+    jopt = pipeline.CompileOptions(backend="jax", blocks=blocks)
+    kf = pipeline.compile(g, dims, options=jopt, cache=cache)
     # the unfused baseline is jitted PER OPERATOR (launch per top-level
     # op, intermediates materialized between launches) — the paper's
     # actual baseline.  Whole-program jit here would hand the unfused
     # graph to XLA, which fuses it itself, and "speedup" would compare
     # our fusion against XLA's instead of against no fusion (that made
     # the pinned ratio dip below 1.0x on several rows).
-    ku = pipeline.compile(g, dims, backend="jax", blocks=blocks,
-                          fused=False, jit="per-op", cache=cache)
+    ku = pipeline.compile(
+        g, dims, options=jopt.replace(fused=False, jit="per-op"),
+        cache=cache)
     fused_us, unfused_us = timed(kf), timed(ku)
     # the second compile must be an in-process cache hit
-    rehit = pipeline.compile(g, dims, backend="jax", blocks=blocks,
+    rehit = pipeline.compile(g, dims, options=jopt,
                              cache=cache).cache_hit
     # Pallas lowering of the SAME selected snapshot: the grouped
     # megakernel schedule (what actually runs) and, for calibration
     # sample diversity, the ungrouped per-region schedule
-    kp = pipeline.compile(g, dims, backend="pallas", blocks=blocks,
-                          interpret=True, cache=cache)
-    kpr = pipeline.compile(g, dims, backend="pallas", blocks=blocks,
-                           interpret=True, cache=cache, group=False)
+    popt = pipeline.CompileOptions(backend="pallas", blocks=blocks,
+                                   interpret=True)
+    kp = pipeline.compile(g, dims, options=popt, cache=cache)
+    kpr = pipeline.compile(g, dims, options=popt.replace(group=False),
+                           cache=cache)
     rep = kp.lowering_report
     if lowering_reports is not None:
         lowering_reports[name] = {

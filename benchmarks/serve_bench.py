@@ -1,0 +1,90 @@
+"""Serving-loop benchmark: replay a fixed synthetic open-loop trace
+through the continuous-batching engine (``launch/engine.py``) and emit
+the gated numbers — tokens/sec, p50/p99 per-token latency, occupancy,
+and the zero-recompile / zero-fallback pins.
+
+    PYTHONPATH=src:. python benchmarks/serve_bench.py --preset ci \
+        --json SERVE_ci.json --report serve_report.json
+
+Row format matches ``benchmarks/run.py`` (``name,us_per_call,derived``)
+so ``check_regression.py`` gates ``serve_*`` rows the same way it gates
+``pipeline_*`` rows: tokens/sec may not collapse >1.5x below the pinned
+baseline, and any steady-state decode recompile or Pallas fallback
+fails outright.  Determinstic keys (completed/rejected counts, compile
+counts) are pinned exactly.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.launch.serve import ServeConfig, run
+
+PRESETS = {
+    # tiny fixed trace for CI runners: small slot count, short prompts
+    "ci": ServeConfig(arch="smollm-135m", backend="pallas", max_batch=2,
+                      max_len=64, prompt_buckets=(8, 16), n_requests=8,
+                      arrival_rate=1.0, prompt_lens=(4, 14),
+                      gen_lens=(3, 8), seed=0, keep_per_step=False),
+    # the trajectory pin at repo root (BENCH_serve.json)
+    "full": ServeConfig(arch="smollm-135m", backend="pallas", max_batch=4,
+                        max_len=96, prompt_buckets=(8, 16, 32),
+                        n_requests=32, arrival_rate=1.0,
+                        prompt_lens=(4, 30), gen_lens=(6, 16), seed=0,
+                        keep_per_step=False),
+}
+
+
+def bench(preset: str) -> dict:
+    cfg = PRESETS[preset]
+    report = run(cfg)
+    total_tokens = report.prefill_tokens + report.decode_tokens
+    us_per_token = (report.wall_s * 1e6 / max(report.decode_tokens, 1))
+    derived = ";".join([
+        f"tokens_per_s={report.tokens_per_s:.1f}",
+        f"decode_tokens_per_s={report.decode_tokens_per_s:.1f}",
+        f"p50_ms={report.p50_token_ms:.2f}",
+        f"p99_ms={report.p99_token_ms:.2f}",
+        f"mean_occupancy={report.mean_occupancy:.2f}",
+        f"max_queue_depth={report.max_queue_depth}",
+        f"steps={report.steps}",
+        f"total_tokens={total_tokens}",
+        f"completed={report.n_completed}",
+        f"rejected={report.n_rejected}",
+        f"stalled={report.n_evicted_stalled}",
+        f"warmup_compiles={report.warmup_compiles}",
+        f"decode_recompiles={report.decode_recompiles}",
+        f"pallas_fallbacks={report.pallas_fallbacks}",
+        f"cache_hit_rate={report.cache_hit_rate:.3f}",
+    ])
+    row = {"name": f"serve_{cfg.arch}_{preset}",
+           "us_per_call": us_per_token, "derived": derived}
+    return {"row": row, "report": report}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="ci", choices=sorted(PRESETS))
+    ap.add_argument("--json", dest="json_out", default=None,
+                    help="write the gate-format rows file")
+    ap.add_argument("--report", default=None,
+                    help="write the full ServeReport JSON")
+    args = ap.parse_args(argv)
+
+    out = bench(args.preset)
+    row, report = out["row"], out["report"]
+    print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump({"preset": args.preset, "rows": [row]}, f, indent=2)
+            f.write("\n")
+    if args.report:
+        with open(args.report, "w") as f:
+            json.dump(report.to_json(), f, indent=1)
+    return 1 if (report.decode_recompiles or report.pallas_fallbacks) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

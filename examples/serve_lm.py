@@ -1,7 +1,9 @@
-"""Batched serving example: prefill + cached greedy decode for any of the
-10 assigned architectures (reduced configs on CPU).
+"""Continuous-batching serving example: an open-loop request trace
+through the slot scheduler + ragged pipeline decode (reduced configs on
+CPU).  Attention-family archs only — padded bucket prefill is exact
+under causal masking; SSM/hybrid state scans would carry pad state.
 
-    PYTHONPATH=src python examples/serve_lm.py --arch mamba2-2.7b
+    PYTHONPATH=src python examples/serve_lm.py --arch smollm-135m
     PYTHONPATH=src python examples/serve_lm.py --arch deepseek-v3-671b
 """
 
@@ -12,7 +14,9 @@ from repro.launch import serve as S
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-135m")
-    ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--n-requests", type=int, default=12)
+    ap.add_argument("--sampling", default="greedy",
+                    choices=("greedy", "categorical"))
     args = ap.parse_args()
-    S.main(["--arch", args.arch, "--reduced", "--batch", "4",
-            "--prompt-len", "16", "--gen", str(args.gen)])
+    S.main(["--arch", args.arch, "--n-requests", str(args.n_requests),
+            "--sampling", args.sampling])

@@ -66,16 +66,22 @@ def get_reduced_config(arch: str, **overrides) -> ModelConfig:
 
 
 def with_pipeline(cfg: ModelConfig, backend: str = "jax",
-                  attn: bool = True, mlp: bool = True) -> ModelConfig:
+                  attn: bool = True, mlp: bool = True,
+                  options=None) -> ModelConfig:
     """Route the config's attention / gated-MLP blocks through the
     ``repro.pipeline`` fusion driver (fuse -> select -> codegen -> cached
     kernel) instead of the hand-written kernels.  ``backend`` is the
-    pipeline codegen backend (``jax`` everywhere; ``pallas`` on TPU)."""
+    pipeline codegen backend (``jax`` everywhere; ``pallas`` on TPU).
+
+    ``options`` (a ``pipeline.CompileOptions``) overrides the full
+    compile configuration — stabilize/group/autotune and the backend
+    (its ``backend`` field wins over the ``backend`` argument)."""
     return dataclasses.replace(
         cfg,
         attn_impl="pipeline" if attn else cfg.attn_impl,
         mlp_impl="pipeline" if mlp else cfg.mlp_impl,
-        pipeline_backend=backend)
+        pipeline_backend=options.backend if options is not None else backend,
+        pipeline_options=options)
 
 
 def cell_supported(arch: str, shape: str) -> Tuple[bool, str]:

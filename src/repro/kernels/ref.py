@@ -35,7 +35,10 @@ def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
     s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) * scale
     if causal:
         skv = k.shape[2]
-        rows = q_offset + jnp.arange(sq)[:, None]
+        off = jnp.asarray(q_offset)
+        if off.ndim == 1:  # ragged: per-sequence causal frontier
+            off = off[:, None, None, None, None]
+        rows = off + jnp.arange(sq)[:, None]
         cols = jnp.arange(skv)[None, :]
         s = jnp.where(rows >= cols, s, -1e30)
     m = jax.lax.stop_gradient(jnp.max(s, axis=-1, keepdims=True))
@@ -82,7 +85,10 @@ def attention_xla_flash(q: jax.Array, k: jax.Array, v: jax.Array, *,
     kb = jnp.moveaxis(k.reshape(b, hq, n_blocks, block_kv, dh), 2, 0)
     vb = jnp.moveaxis(v.reshape(b, hq, n_blocks, block_kv, dv), 2, 0)
 
-    rows = (q_offset + jnp.arange(sq))[None, None, :, None]
+    off = jnp.asarray(q_offset)
+    if off.ndim == 1:  # ragged: per-sequence causal frontier
+        off = off[:, None, None, None]
+    rows = off + jnp.arange(sq)[None, None, :, None]
 
     def step(carry, blk):
         m_prev, l_prev, acc = carry

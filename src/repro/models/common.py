@@ -75,6 +75,12 @@ class ModelConfig:
     pipeline_backend: str = "jax"  # codegen backend for the *pipeline*
                                  # impls: py | jax | pallas (the fusion-
                                  # derived kernels from repro.pipeline)
+    pipeline_options: Any = None  # Optional[pipeline.CompileOptions]:
+                                 # full compile-option override for the
+                                 # pipeline impls; when set, its backend
+                                 # field wins over pipeline_backend.
+                                 # Hashable, so the config stays usable
+                                 # as a cache key.
     remat: bool = True
     remat_policy: str = "full"   # full | dots  (dots: save matmul outputs,
                                  # no recompute of the big dots in backward)

@@ -53,13 +53,28 @@ def _pipeline_dims_blocks(sizes):
     return dims, blocks
 
 
+def _pipeline_options(src):
+    """Resolve a :class:`pipeline.CompileOptions` from a ModelConfig, a
+    bare backend string (back-compat), or an options instance."""
+    from repro import pipeline as PL
+    if isinstance(src, PL.CompileOptions):
+        return src
+    if isinstance(src, str):
+        return PL.CompileOptions(backend=src)
+    if src.pipeline_options is not None:
+        return src.pipeline_options
+    return PL.CompileOptions(backend=src.pipeline_backend)
+
+
 @functools.lru_cache(maxsize=256)
 def _attention_kernel(s: int, dh: int, sk: int, dv: int, group: int,
-                      causal: bool, scale: float, backend: str):
-    """One compiled kernel per (shape, group, causal, scale, backend); the
+                      causal: bool, scale: float, options):
+    """One compiled kernel per (shape, group, causal, scale, options); the
     lru_cache skips graph reconstruction + fingerprinting on every forward
-    call.  Query positions are kernel *data* (QP/KP inputs), so a decode
-    step at any cache position reuses the same compiled kernel."""
+    call (CompileOptions is hashable, so it keys directly).  Query
+    positions are kernel *data* (QP/KP inputs), so a decode step at any
+    cache position — scalar or a ragged per-sequence position vector —
+    reuses the same compiled kernel."""
     from repro import pipeline as PL
     from repro.core import array_program as AP
     dims, blocks = _pipeline_dims_blocks(
@@ -72,52 +87,62 @@ def _attention_kernel(s: int, dh: int, sk: int, dv: int, group: int,
         g = AP.causal_attention_program(scale)
     else:
         g = AP.attention_program(scale)
-    return PL.compile(g, dims, backend=backend, blocks=blocks)
+    return PL.compile(g, dims, options=options.replace(blocks=blocks))
 
 
 @functools.lru_cache(maxsize=256)
-def _swiglu_kernel(t: int, d: int, d_ff: int, eps: float, backend: str):
+def _swiglu_kernel(t: int, d: int, d_ff: int, eps: float, options):
     from repro import pipeline as PL
     from repro.core import array_program as AP
     dims, blocks = _pipeline_dims_blocks(
         {"M": t, "D": d, "K": d_ff, "N": d})
     return PL.compile(
         AP.rmsnorm_ffn_swiglu_program(float(d), eps=eps), dims,
-        backend=backend, blocks=blocks)
+        options=options.replace(blocks=blocks))
 
 
-def _attention_pipeline(q, k, v, scale: float, backend: str, *,
+def _attention_pipeline(q, k, v, scale: float, options, *,
                         causal: bool = False, q_offset=0) -> jax.Array:
     """Attention through the fused pipeline — causal or not, MHA or GQA.
 
-    One compiled kernel per (shape, group, causal, backend), vmapped over
+    One compiled kernel per (shape, group, causal, options), vmapped over
     batch and kv heads.  GQA runs the head-group block program (Q blocked
     (H, M, D); K/V broadcast across the group).  Causal masking takes the
     global query/key positions as kernel inputs, so decode (``q`` is one
     token at cache position ``q_offset``) is the same program with M = 1
-    and needs no recompile as the position advances."""
+    and needs no recompile as the position advances.  ``q_offset`` may be
+    a scalar (every sequence at the same position) or a ``(b,)`` vector
+    (ragged continuous-batching decode: each sequence at its own cache
+    position) — the ragged case maps the per-sequence position vector
+    into the kernel's QP input, same compiled kernel either way."""
+    opts = _pipeline_options(options)
     b, hq, sq, dh = q.shape
     _, hkv, skv, _ = k.shape
     dv = v.shape[3]
     group = hq // hkv
-    kern = _attention_kernel(sq, dh, skv, dv, group, causal, scale,
-                             backend)
-    pos_in = {}
-    if causal:
-        pos_in = {"QP": jnp.arange(sq, dtype=jnp.float32) + q_offset,
-                  "KP": jnp.arange(skv, dtype=jnp.float32)}
+    kern = _attention_kernel(sq, dh, skv, dv, group, causal, scale, opts)
+    kp = jnp.arange(skv, dtype=jnp.float32)
 
-    def one(qh, kh, vh):
-        return kern({"Q": qh.astype(jnp.float32),
-                     "KT": kh.astype(jnp.float32),
-                     "VT": vh.astype(jnp.float32).T, **pos_in})["O"]
+    def one(qh, kh, vh, qp):
+        feed = {"Q": qh.astype(jnp.float32),
+                "KT": kh.astype(jnp.float32),
+                "VT": vh.astype(jnp.float32).T}
+        if causal:
+            feed["QP"], feed["KP"] = qp, kp
+        return kern(feed)["O"]
 
+    off = jnp.asarray(q_offset, dtype=jnp.float32)
+    qp = off[..., None] + jnp.arange(sq, dtype=jnp.float32)
+    # heads share the position vector; the batch axis maps it only when
+    # q_offset is ragged (per-sequence)
+    inner = jax.vmap(one, in_axes=(0, 0, 0, None))
+    outer = jax.vmap(inner, in_axes=(0, 0, 0, 0 if off.ndim == 1 else None))
     if group > 1:
         qg = q.reshape(b, hkv, group, sq, dh)
-        o = jax.vmap(jax.vmap(one))(qg, k, v)      # (b, hkv, group, sq, dv)
+        o = outer(qg, k, v, qp)                    # (b, hkv, group, sq, dv)
         o = o.reshape(b, hq, sq, dv)
     else:
-        o = jax.vmap(jax.vmap(one))(q, k, v)
+        o = outer(q, k, v, qp)
     return o.astype(q.dtype)
 
 
@@ -128,7 +153,7 @@ def _swiglu_pipeline(x2, wg, wu, wd, gamma, cfg: ModelConfig) -> jax.Array:
     t, d = x2.shape
     d_ff = wg.shape[1]
     kern = _swiglu_kernel(t, d, d_ff, float(cfg.norm_eps),
-                          cfg.pipeline_backend)
+                          _pipeline_options(cfg))
     gf = gamma.astype(jnp.float32)[:, None]
     out = kern({"X": x2.astype(jnp.float32),
                 "WT": (gf * wg.astype(jnp.float32)).T,
@@ -194,7 +219,7 @@ def attention_apply(p, x, cfg: ModelConfig, *, causal=True,
         # online-softmax rewrite, compiled on every backend), so the
         # generated kernel is finite at any logit magnitude.
         o = _attention_pipeline(q, k, v, 1.0 / cfg.d_head ** 0.5,
-                                cfg.pipeline_backend, causal=causal)
+                                cfg, causal=causal)
     else:
         o = K.flash_attention(q, k, v, causal=causal, impl=cfg.attn_impl,
                               unroll=cfg.unroll_scans,
@@ -217,19 +242,37 @@ def attention_cache_specs(cfg: ModelConfig):
 
 
 def attention_decode(p, x, cache, pos, cfg: ModelConfig):
-    """One-token decode: insert k/v at ``pos``, attend over the cache."""
+    """One-token decode: insert k/v at ``pos``, attend over the cache.
+
+    ``pos`` is either a scalar (every sequence at the same position — the
+    classic lockstep batch) or a ``(b,)`` int vector (ragged
+    continuous-batching step: each sequence writes its k/v at its own
+    cache position and masks its own causal frontier).  Both run the same
+    compiled kernels — positions are data, not shape."""
     b = x.shape[0]
-    positions = jnp.full((1,), pos, jnp.int32) if cfg.rope_theta > 0 else None
+    pos = jnp.asarray(pos, jnp.int32)
+    ragged = pos.ndim == 1
+    if cfg.rope_theta > 0:
+        # (b,1,1) broadcasts per-sequence angles through apply_rope's
+        # (..., S, Dh) convention; scalar keeps the shared (1,) vector
+        positions = pos[:, None, None] if ragged else pos.reshape(1)
+    else:
+        positions = None
     q, k, v = _qkv(p, x, cfg, positions)
-    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                      (0, 0, pos, 0))
-    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                      (0, 0, pos, 0))
+    if ragged:
+        def put(buf, val, pv):  # per sequence: (hkv, max_len, dh) at pv
+            return jax.lax.dynamic_update_slice(buf, val, (0, pv, 0))
+        ck = jax.vmap(put)(cache["k"], k.astype(cache["k"].dtype), pos)
+        cv = jax.vmap(put)(cache["v"], v.astype(cache["v"].dtype), pos)
+    else:
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, 0, pos, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, 0, pos, 0))
     # mask positions beyond pos via the causal path with explicit offset
     if cfg.attn_impl == "pipeline":
         o = _attention_pipeline(q, ck, cv, 1.0 / cfg.d_head ** 0.5,
-                                cfg.pipeline_backend, causal=True,
-                                q_offset=pos)
+                                cfg, causal=True, q_offset=pos)
     else:
         o = K.flash_attention(q, ck, cv, causal=True, q_offset=pos,
                               impl=cfg.attn_impl,
@@ -321,16 +364,30 @@ def mla_cache_specs(cfg: ModelConfig):
 
 def mla_decode(p, x, cache, pos, cfg: ModelConfig):
     """Absorbed decode: attention runs against the *compressed* cache
-    (this is MLA's serving trick; the per-token cache is r+rope wide)."""
+    (this is MLA's serving trick; the per-token cache is r+rope wide).
+
+    Like ``attention_decode``, ``pos`` is a scalar or a ``(b,)`` vector
+    (ragged continuous-batching step)."""
     b = x.shape[0]
     h = cfg.n_heads
-    positions = jnp.full((1,), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    ragged = pos.ndim == 1
+    positions = pos[:, None, None] if ragged else pos.reshape(1)
     q_nope, q_rope = _mla_q(p, x, cfg, positions)       # (b,h,1,*)
     ckv_t, krope_t = _mla_kv_compressed(p, x, cfg, positions)
-    ckv = jax.lax.dynamic_update_slice(
-        cache["ckv"], ckv_t.astype(cache["ckv"].dtype), (0, pos, 0))
-    krope = jax.lax.dynamic_update_slice(
-        cache["krope"], krope_t.astype(cache["krope"].dtype), (0, pos, 0))
+    if ragged:
+        def put(buf, val, pv):  # per sequence: (max_len, width) at pv
+            return jax.lax.dynamic_update_slice(buf, val, (pv, 0))
+        ckv = jax.vmap(put)(cache["ckv"],
+                            ckv_t.astype(cache["ckv"].dtype), pos)
+        krope = jax.vmap(put)(cache["krope"],
+                              krope_t.astype(cache["krope"].dtype), pos)
+    else:
+        ckv = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv_t.astype(cache["ckv"].dtype), (0, pos, 0))
+        krope = jax.lax.dynamic_update_slice(
+            cache["krope"], krope_t.astype(cache["krope"].dtype),
+            (0, pos, 0))
 
     wkv_b = p["wkv_b"].reshape(cfg.kv_lora_rank, h,
                                cfg.qk_nope_dim + cfg.v_head_dim)
@@ -343,7 +400,8 @@ def mla_decode(p, x, cache, pos, cfg: ModelConfig):
          + jnp.einsum("bhqe,bse->bhqs", q_rope.astype(jnp.float32),
                       krope.astype(jnp.float32))) * scale
     cols = jnp.arange(ckv.shape[1])[None, None, None, :]
-    s = jnp.where(cols <= pos, s, -1e30)
+    frontier = pos[:, None, None, None] if ragged else pos
+    s = jnp.where(cols <= frontier, s, -1e30)
     m = s.max(-1, keepdims=True)
     pr = jnp.exp(s - m)
     pr = pr / pr.sum(-1, keepdims=True)

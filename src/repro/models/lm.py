@@ -243,7 +243,9 @@ class LM:
 
     # -- decode ---------------------------------------------------------------------
     def decode_step(self, params, caches, tokens, pos):
-        """tokens: (B, 1) next input token; pos: filled cache length."""
+        """tokens: (B, 1) next input token; pos: filled cache length —
+        a scalar (lockstep batch) or a (B,) int vector (ragged
+        continuous-batching step, each sequence at its own position)."""
         cfg = self.cfg
         x = self._embed(params, tokens)
 
@@ -281,10 +283,15 @@ class LM:
                         xn = rms_norm(x, p["ln1"], cfg.norm_eps)
                         pos = jnp.arange(s) if cfg.rope_theta > 0 else None
                         q, k, v = L._qkv(p["mixer"], xn, cfg, pos)
-                        from repro.kernels import ops as K
-                        y = K.flash_attention(q, k, v, causal=True,
-                                              impl=cfg.attn_impl,
-                                              unroll=cfg.unroll_scans)
+                        if cfg.attn_impl == "pipeline":
+                            y = L._attention_pipeline(
+                                q, k, v, 1.0 / cfg.d_head ** 0.5, cfg,
+                                causal=True)
+                        else:
+                            from repro.kernels import ops as K
+                            y = K.flash_attention(q, k, v, causal=True,
+                                                  impl=cfg.attn_impl,
+                                                  unroll=cfg.unroll_scans)
                         b = x.shape[0]
                         y = y.transpose(0, 2, 1, 3).reshape(
                             b, s, cfg.n_heads * cfg.d_head)

@@ -1,20 +1,26 @@
 """``repro.pipeline`` — the end-to-end fusion pipeline.
 
-``compile(graph, dims, backend=...)`` drives the whole paper loop —
-fusion algorithm -> snapshot/block-shape selection (traffic cost model)
--> backend codegen — and memoizes the result in a two-level kernel cache
-(in-process callables + on-disk compilation plans).  Model layers and
-benchmarks execute through this driver; it is the substrate later
-scaling work (sharding, batching, serving) compiles through.
+``compile(graph, dims, options=CompileOptions(...))`` drives the whole
+paper loop — fusion algorithm -> snapshot/block-shape selection
+(traffic cost model) -> backend codegen — and memoizes the result in a
+two-level kernel cache (in-process callables + on-disk compilation
+plans).  ``CompileOptions`` is the frozen, hashable description of
+*how* a program compiles (backend, blocks, stabilize, autotune, group,
+...) and hashes directly into the cache key; the flat keyword form
+``compile(graph, dims, backend=...)`` remains as a deprecated
+back-compat shim.  Model layers and benchmarks execute through this
+driver; it is the substrate later scaling work (sharding, batching,
+serving) compiles through.
 """
 
 from repro.pipeline.cache import (CODEGEN_VERSION, CacheKey, CachePlan,
                                   CacheStats, KernelCache, default_cache,
                                   reset_default_cache)
 from repro.pipeline.driver import BACKENDS, CompiledKernel, compile
+from repro.pipeline.options import DEFAULT_OPTIONS, CompileOptions
 
 __all__ = [
     "BACKENDS", "CODEGEN_VERSION", "CacheKey", "CachePlan", "CacheStats",
-    "CompiledKernel", "KernelCache", "compile", "default_cache",
-    "reset_default_cache",
+    "CompileOptions", "CompiledKernel", "DEFAULT_OPTIONS", "KernelCache",
+    "compile", "default_cache", "reset_default_cache",
 ]

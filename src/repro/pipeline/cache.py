@@ -152,6 +152,29 @@ class CacheStats:
     disk_hits: int = 0
     misses: int = 0
 
+    @property
+    def compiles(self) -> int:
+        """Compile paths that did NOT hit the in-process kernel cache:
+        fresh compilations (``misses``) plus disk-plan reloads
+        (``disk_hits``).  Serving engines pin the steady-state growth of
+        this counter to zero to prove no per-step recompiles."""
+        return self.misses + self.disk_hits
+
+    @property
+    def hit_rate(self) -> float:
+        hits = self.memory_hits + self.disk_hits
+        total = hits + self.misses
+        return hits / total if total else 1.0
+
+    def snapshot(self) -> "CacheStats":
+        return CacheStats(self.memory_hits, self.disk_hits, self.misses)
+
+    def delta(self, since: "CacheStats") -> "CacheStats":
+        """Counter growth since a ``snapshot()``."""
+        return CacheStats(self.memory_hits - since.memory_hits,
+                          self.disk_hits - since.disk_hits,
+                          self.misses - since.misses)
+
 
 class KernelCache:
     def __init__(self, root: Optional[os.PathLike] = None,
@@ -212,9 +235,11 @@ class KernelCache:
 
     def put_plan(self, key: CacheKey, plan: CachePlan,
                  graph: Optional[Graph]) -> None:
+        # a fresh plan is a compile-path miss whether or not it persists
+        # (disk=False caches still feed the serving recompile counters)
+        self.stats.misses += 1
         if not self.disk:
             return
-        self.stats.misses += 1
         pj, pg = self._paths(key)
         try:
             self.root.mkdir(parents=True, exist_ok=True)

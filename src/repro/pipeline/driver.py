@@ -58,6 +58,7 @@ from repro.core.graph import Graph
 from repro.pipeline import packing as P
 from repro.pipeline.cache import (CacheKey, CachePlan, KernelCache,
                                   default_cache)
+from repro.pipeline.options import DEFAULT_OPTIONS, CompileOptions
 
 BACKENDS = ("py", "jax", "pallas")
 AUTOTUNE_OBJECTIVES = ("analytic", "measured")
@@ -242,11 +243,8 @@ def _lower_pallas(g: Graph, dims: Dict[str, int],
 
 def _measure_harness(graph: Graph,
                      dim_candidates: Dict[str, Sequence[int]], *,
-                     backend: str, blocks: Optional[Dict[str, int]],
-                     interpret, jit,
-                     item_bytes: Optional[Dict[str, int]],
-                     profile, fused: bool, cache: KernelCache,
-                     repeats: int, group: bool = True,
+                     options: CompileOptions, profile,
+                     cache: KernelCache,
                      stabilize: bool = False) -> Callable:
     """The ``measure`` callback ``selection.autotune(objective=
     "measured")`` calls for each top-K survivor: compile the candidate
@@ -262,6 +260,9 @@ def _measure_harness(graph: Graph,
     (``timing.measured``) keyed by (fingerprint, dims, backend, device,
     totals), so re-sweeps never re-time a configuration."""
     from repro.core import timing as T
+    o = options
+    repeats = o.measure_repeats
+    blocks = o.blocks_dict
     sd = T.stack_dims(graph)
     base = {d: (1 if d in sd else (blocks or {}).get(d, 8))
             for d in dim_candidates}
@@ -283,16 +284,17 @@ def _measure_harness(graph: Graph,
         # everything the wall time depends on is in the memo key —
         # notably interpret mode (orders of magnitude slower) and the
         # repeat count
-        mkey = (fp, dkey, backend, dev, tuple(sorted(total.items())),
-                jit, fused, interpret, repeats, group, stabilize)
+        mkey = (fp, dkey, o.backend, dev, tuple(sorted(total.items())),
+                o.jit, o.fused, o.interpret, repeats, o.group, stabilize)
 
         def thunk() -> float:
-            kern = compile(graph, dict(sel.dims), backend=backend,
-                           blocks=(cand_blocks if backend == "pallas"
-                                   else blocks),
-                           item_bytes=item_bytes, fused=fused,
-                           interpret=interpret, jit=jit, profile=profile,
-                           cache=cache, group=group, stabilize=stabilize)
+            cand = o.replace(
+                blocks=(cand_blocks if o.backend == "pallas"
+                        else o.blocks),
+                stabilize=stabilize, autotune="analytic",
+                profile=profile)
+            kern = compile(graph, dict(sel.dims), options=cand,
+                           cache=cache)
             kernels[dkey] = kern
             inputs = T.synth_inputs(graph, sel.dims, cand_blocks)
             return T.time_callable(kern, inputs, warmup=1,
@@ -305,21 +307,22 @@ def _measure_harness(graph: Graph,
 
 
 def compile(graph: Graph, dims: Optional[Dict[str, int]] = None, *,
-            backend: str = "jax",
-            blocks: Optional[Dict[str, int]] = None,
+            options: Optional[CompileOptions] = None,
             dim_candidates: Optional[Dict[str, Sequence[int]]] = None,
-            item_bytes: Optional[Dict[str, int]] = None,
-            fused: bool = True,
-            interpret=None,
-            jit=True,
-            stabilize: Optional[bool] = None,
             cache: Optional[KernelCache] = None,
-            autotune: str = "analytic",
-            profile: Optional[CAL.CalibrationProfile] = None,
-            top_k: int = 3,
-            measure_repeats: int = 3,
-            group: bool = True) -> CompiledKernel:
+            **kwargs) -> CompiledKernel:
     """Compile a block program into an executing, cached kernel.
+
+    How the program compiles is described by ``options``, a frozen
+    hashable :class:`CompileOptions` (``backend``, ``blocks``,
+    ``stabilize``, ``autotune``, ``group``, ...).  The historical flat
+    keyword form — ``compile(g, dims, backend="pallas", blocks=...)`` —
+    is kept as a back-compat shim that builds a ``CompileOptions``
+    internally; it is **deprecated** and new call sites should pass
+    ``options=`` (passing both forms at once is a ``TypeError``).  The
+    options hash directly into the kernel-cache key
+    (``CompileOptions.cache_opts``), so equal options can never compile
+    twice and unequal options can never alias.
 
     Either ``dims`` (fixed block counts -> ``selection.select``) or
     ``dim_candidates`` (a per-dim sweep -> ``selection.autotune``, which
@@ -364,17 +367,29 @@ def compile(graph: Graph, dims: Optional[Dict[str, int]] = None, *,
     ``core/calibrate.py``).  The analytic path always keeps the
     deterministic defaults.
     """
+    if options is None:
+        try:
+            options = CompileOptions(**kwargs) if kwargs else DEFAULT_OPTIONS
+        except TypeError as e:
+            raise TypeError(f"pipeline.compile: {e}") from None
+    elif kwargs:
+        raise TypeError(
+            "pipeline.compile: pass either options=CompileOptions(...) or "
+            f"the flat keyword form, not both (extra: {sorted(kwargs)})")
+    o = options
+    backend, item_bytes, fused = o.backend, o.item_bytes_dict, o.fused
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
     if dims is None and dim_candidates is None:
         raise ValueError("pass dims= (fixed) or dim_candidates= (autotune)")
-    if autotune not in AUTOTUNE_OBJECTIVES:
-        raise ValueError(f"unknown autotune objective {autotune!r}; "
+    if o.autotune not in AUTOTUNE_OBJECTIVES:
+        raise ValueError(f"unknown autotune objective {o.autotune!r}; "
                          f"one of {AUTOTUNE_OBJECTIVES}")
-    if autotune == "measured" and dim_candidates is None:
+    if o.autotune == "measured" and dim_candidates is None:
         raise ValueError("autotune='measured' needs dim_candidates=")
     cache = cache if cache is not None else default_cache()
-    if profile is None and autotune == "measured":
+    profile = o.profile
+    if profile is None and o.autotune == "measured":
         # the measured path runs under the calibrated cost model fitted
         # for this backend+device (default constants if none saved)
         profile = CAL.load_or_default(cache.root, backend=backend,
@@ -382,8 +397,17 @@ def compile(graph: Graph, dims: Optional[Dict[str, int]] = None, *,
 
     # default: stabilize exactly the programs that need it (block-typed
     # top-level exp, i.e. softmax-bearing programs like attention)
-    stab = (NU.needs_stabilization(graph) if stabilize is None
-            else bool(stabilize))
+    stab = (NU.needs_stabilization(graph) if o.stabilize is None
+            else bool(o.stabilize))
+
+    vmem_budget = None
+    if backend == "pallas":
+        from repro.core import regions as REG
+        from repro.core.codegen_pallas import resolve_interpret
+        o = o.replace(interpret=resolve_interpret(o.interpret))
+        if o.group:
+            vmem_budget = REG.vmem_budget()
+    blocks, interpret, jit, group = o.blocks_dict, o.interpret, o.jit, o.group
 
     # autotune keys embed the full candidate sweep, so two sweeps over the
     # same dim names but different candidate sets never collide
@@ -391,33 +415,10 @@ def compile(graph: Graph, dims: Optional[Dict[str, int]] = None, *,
                 else {k: tuple(v) for k, v in dim_candidates.items()})
     # every option that changes the emitted kernel or the selection plan
     # is part of the key, else a later compile is served a stale kernel
-    opts: tuple = ()
-    if stab:
-        opts += (("stabilize", True),)
-    if backend == "jax":
-        opts += (("jit", jit if jit == "per-op" else bool(jit)),)
-    if backend == "pallas":
-        from repro.core import regions as REG
-        from repro.core.codegen_pallas import resolve_interpret
-        interpret = resolve_interpret(interpret)
-        opts += (("interpret", interpret), ("jit", bool(jit)))
-        if not group:
-            opts += (("group", False),)
-        else:
-            # the VMEM budget shapes the grouping, so a plan cached
-            # under one budget must never serve another (its
-            # kernel_ids/launches would describe kernels that no
-            # longer exist)
-            opts += (("vmem_budget", REG.vmem_budget()),)
-    if item_bytes:
-        opts += (("item_bytes", tuple(sorted(item_bytes.items()))),)
-    if dim_candidates is not None and autotune != "analytic":
-        opts += (("autotune", autotune),)
-    if (profile is not None
-            and profile.digest() != CAL.DEFAULT_PROFILE.digest()):
-        # a different calibration profile can select a different
-        # snapshot/dims: never serve its plan under the default's key
-        opts += (("profile", profile.digest()),)
+    # (CompileOptions.cache_opts is the single source of truth)
+    opts = o.cache_opts(stabilized=stab,
+                        autotuned=dim_candidates is not None,
+                        profile=profile, vmem_budget=vmem_budget)
     key = CacheKey.make(graph.fingerprint(), backend, key_dims, blocks,
                         fused, opts)
     hit = cache.get_kernel(key)
@@ -451,16 +452,14 @@ def compile(graph: Graph, dims: Optional[Dict[str, int]] = None, *,
             snaps = [NU.stabilize(s) for s in snaps]
             base = NU.stabilize(graph)
         if dim_candidates is not None:
-            if autotune == "measured":
+            if o.autotune == "measured":
                 measure = _measure_harness(
-                    graph, dim_candidates, backend=backend, blocks=blocks,
-                    interpret=interpret, jit=jit, item_bytes=item_bytes,
-                    profile=profile, fused=fused, cache=cache,
-                    repeats=measure_repeats, group=group, stabilize=stab)
+                    graph, dim_candidates, options=o, profile=profile,
+                    cache=cache, stabilize=stab)
                 sel = SEL.autotune(base, dim_candidates, item_bytes,
                                    snapshots=snaps, objective="measured",
                                    profile=profile, measure=measure,
-                                   top_k=top_k, group=sel_group,
+                                   top_k=o.top_k, group=sel_group,
                                    blocks=blocks)
                 timings = sel.timings
             else:

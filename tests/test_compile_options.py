@@ -1,0 +1,105 @@
+"""CompileOptions: hashing, cache-key identity with the kwargs shim,
+and threading through configs/layers."""
+
+import pytest
+
+from repro import configs, pipeline
+from repro.core import array_program as AP
+
+
+def _graph():
+    return AP.layernorm_matmul_program(32.0)
+
+
+DIMS = {"M": 2, "K": 4, "N": 2}
+
+
+def test_hash_equality_dict_order_insensitive():
+    a = pipeline.CompileOptions(backend="pallas",
+                                blocks={"M": 8, "N": 4},
+                                item_bytes={"x": 4, "y": 2})
+    b = pipeline.CompileOptions(backend="pallas",
+                                blocks={"N": 4, "M": 8},
+                                item_bytes={"y": 2, "x": 4})
+    assert a == b
+    assert hash(a) == hash(b)
+    assert a.blocks_dict == {"M": 8, "N": 4}
+    assert a != a.replace(group=False)
+    # usable as a dict key (the layer lru_caches rely on this)
+    assert {a: 1}[b] == 1
+
+
+def test_kwargs_shim_aliases_options_form():
+    cache = pipeline.KernelCache(disk=False)
+    k1 = pipeline.compile(_graph(), DIMS, backend="py", cache=cache)
+    k2 = pipeline.compile(_graph(), DIMS,
+                          options=pipeline.CompileOptions(backend="py"),
+                          cache=cache)
+    assert k1.key == k2.key
+    assert k2.cache_hit == "memory"
+
+
+def test_default_options_alias():
+    cache = pipeline.KernelCache(disk=False)
+    k1 = pipeline.compile(_graph(), DIMS, cache=cache)
+    k2 = pipeline.compile(_graph(), DIMS,
+                          options=pipeline.DEFAULT_OPTIONS, cache=cache)
+    assert k2.cache_hit == "memory"
+    assert k1.key == k2.key
+
+
+def test_both_forms_is_type_error():
+    with pytest.raises(TypeError, match="not both"):
+        pipeline.compile(_graph(), DIMS,
+                         options=pipeline.CompileOptions(), backend="py",
+                         cache=pipeline.KernelCache(disk=False))
+
+
+def test_unknown_kwarg_is_type_error():
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        pipeline.compile(_graph(), DIMS, bogus_flag=True,
+                         cache=pipeline.KernelCache(disk=False))
+
+
+def test_unequal_options_never_alias():
+    cache = pipeline.KernelCache(disk=False)
+    k1 = pipeline.compile(_graph(), DIMS, cache=cache)  # jax backend
+    k2 = pipeline.compile(_graph(), DIMS,
+                          options=pipeline.CompileOptions(jit=False),
+                          cache=cache)
+    assert k1.key != k2.key
+    assert k2.cache_hit is None
+
+
+def test_cache_opts_reflects_resolved_decisions():
+    o = pipeline.CompileOptions(backend="pallas", interpret=True,
+                                group=False)
+    opts = o.cache_opts(stabilized=True, autotuned=False)
+    assert ("stabilize", True) in opts
+    assert ("interpret", True) in opts
+    assert ("group", False) in opts
+    # analytic autotune never salts the key (autotuned or not)
+    o2 = pipeline.CompileOptions()
+    assert all(k != "autotune"
+               for k, _ in o2.cache_opts(stabilized=False, autotuned=True))
+
+
+def test_with_pipeline_threads_options():
+    o = pipeline.CompileOptions(backend="pallas", interpret=True)
+    cfg = configs.with_pipeline(configs.get_reduced_config("smollm-135m"),
+                                options=o)
+    assert cfg.pipeline_options == o
+    assert cfg.pipeline_backend == "pallas"
+    assert cfg.attn_impl == "pipeline" and cfg.mlp_impl == "pipeline"
+    # hashability survives (ModelConfig is a frozen dataclass key)
+    hash(cfg)
+
+
+def test_stats_helpers():
+    s = pipeline.CacheStats(memory_hits=3, disk_hits=1, misses=2)
+    assert s.compiles == 3
+    assert abs(s.hit_rate - 4 / 6) < 1e-9
+    snap = s.snapshot()
+    s.misses += 5
+    d = s.delta(snap)
+    assert d.misses == 5 and d.compiles == 5 and d.memory_hits == 0
