@@ -67,11 +67,14 @@ GATED_KEYS = ("pred_traffic_reduction", "pallas_regions",
               "pallas_fallbacks", "launches", "resident_edges", "speedup",
               "region_spearman")
 # serving rows: exact pins for the deterministic scheduler counters,
-# ratio-gated throughput, and the zero-recompile / zero-fallback pins
+# ratio-gated throughput, and the zero-recompile / zero-fallback pins.
+# degradations/quarantined are the resilience counters: pinned at zero
+# on the clean path (the fault machinery must never cost the happy path)
 GATED_SERVE_KEYS = ("tokens_per_s", "completed", "rejected", "stalled",
                     "warmup_compiles", "decode_recompiles",
-                    "pallas_fallbacks")
-SERVE_EXACT_KEYS = ("completed", "rejected", "stalled", "warmup_compiles")
+                    "pallas_fallbacks", "degradations", "quarantined")
+SERVE_EXACT_KEYS = ("completed", "rejected", "stalled", "warmup_compiles",
+                    "degradations", "quarantined")
 
 
 def _parse_derived(derived: str) -> dict:
@@ -253,7 +256,8 @@ def main(argv) -> int:
     # baseline-listed or new — a steady-state decode step that compiles
     # (or a region that falls off the megakernel path) always fails
     for name, cur in sorted(cur_srv.items()):
-        for k in ("decode_recompiles", "pallas_fallbacks"):
+        for k in ("decode_recompiles", "pallas_fallbacks",
+                  "degradations", "quarantined"):
             v = cur.get(k)
             if v is not None and v != "0":
                 failures.append(f"{name}: {k}={v} (must be 0)")

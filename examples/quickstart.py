@@ -348,3 +348,71 @@ print(f"serving: {report.n_completed}/{report.n_requests} requests in "
       f"recompiles after warmup = {report.decode_recompiles}")
 assert report.n_completed == len(trace)
 assert report.decode_recompiles == 0   # positions are data, not shape
+
+# 13. what happens when things fail: every compile now runs on a
+#     degradation LADDER — grouped megakernel -> ungrouped per-region
+#     pallas -> jax -> interpreter.  When a rung raises (or exceeds
+#     ResiliencePolicy.attempt_timeout_s), pipeline.compile demotes one
+#     rung and keeps going; the kernel you get back carries the full
+#     provenance in .resilience_report.  The default policy costs the
+#     happy path nothing (no timeout thread, no retries — one `try`
+#     around the lowering call that already existed), and demotion
+#     never swallows YOUR mistakes: configuration errors (pallas
+#     without blocks) still raise ValueError before any rung runs.
+#
+#     Triage runbook, in the order things break:
+#       * kernel.resilience_report.summary() — which rung served the
+#         compile and every failed attempt (rung, retry, elapsed,
+#         error); demotions > 0 in production is a backend bug to
+#         file, not a crash to page on.
+#       * pipeline.default_cache().stats — corrupt_plans /
+#         corrupt_graphs / quarantined / write_errors name every
+#         recovered cache error; the corrupt bytes sit untouched in
+#         <cache>/quarantine/ for inspection (entries are checksummed
+#         envelopes, verified on every read, written atomically).
+#       * ServeReport.failures — one structured record per poisoned /
+#         deadline-evicted / rejected request and per watchdog decode
+#         demotion; report.degradations + report.quarantined roll the
+#         run's counters up (both pinned to ZERO on the clean path by
+#         benchmarks/check_regression.py, and chaos-tested in the CI
+#         `chaos` job via a seeded resilience.FaultPlan —
+#         $REPRO_FAULT_PLAN drives the same machinery from the shell).
+from repro import resilience as RZ
+
+outage = RZ.FaultPlan([RZ.FaultSpec(site="compile:grouped",
+                                    kind="raise",
+                                    message="demo outage")])
+with RZ.faults(outage), warnings.catch_warnings():
+    warnings.simplefilter("ignore")  # the demotion warns; demo hides it
+    k_demoted = pipeline.compile(multi, mdims, backend="pallas",
+                                 blocks=mblocks,
+                                 cache=pipeline.KernelCache(disk=False))
+print()
+print("resilience: injected a grouped-rung failure ->")
+print(f"  {k_demoted.resilience_report.summary()}")
+z_demoted = np.asarray(k_demoted({"X": X, "YT": Y.T})["Z"])
+np.testing.assert_allclose(z_demoted, xn_ref @ Y, rtol=2e-4, atol=2e-4)
+print(f"  demoted kernel output matches the reference: True "
+      f"(served by rung {k_demoted.rung!r})")
+assert k_demoted.rung == "ungrouped"
+assert k_demoted.resilience_report.demotions == 1
+
+# a bounded policy turns exhaustion into a typed, report-carrying error
+strict = pipeline.CompileOptions(
+    backend="pallas", blocks=mblocks,
+    resilience=RZ.ResiliencePolicy(max_rung="ungrouped", retries=1,
+                                   backoff_s=0.0))
+both_down = RZ.FaultPlan([
+    RZ.FaultSpec(site="compile:grouped", indices=(0, 1)),
+    RZ.FaultSpec(site="compile:ungrouped", indices=(0, 1))])
+with RZ.faults(both_down), warnings.catch_warnings():
+    warnings.simplefilter("ignore")
+    try:
+        pipeline.compile(multi, mdims, options=strict,
+                         cache=pipeline.KernelCache(disk=False))
+        raise AssertionError("bounded ladder should have exhausted")
+    except RZ.LadderError as e:
+        print(f"  bounded ladder exhausted as designed: "
+              f"{len(e.report.attempts)} attempts, "
+              f"last rung {e.report.attempts[-1].rung!r} "
+              f"(retries included)")

@@ -87,6 +87,11 @@ class LoweringReport:
     regions: List[RegionReport] = field(default_factory=list)
     launches: int = 0
     resident_edges: int = 0
+    # the RegionError that made partitioning fall back to one
+    # whole-program jax region (None when the partitioner succeeded) —
+    # recorded so check_regression.py and the serve warmup fallback
+    # checks can see the demotion instead of a silent except
+    plan_error: Optional[str] = None
 
     @property
     def n_regions(self) -> int:
@@ -795,7 +800,8 @@ def emit_program(g: Graph, dims: Dict[str, int], blocks: Dict[str, int],
                                         tuple(whole.out_refs)), fn)]
         fn.input_refs = [(i, 0) for i in g.input_ids]
         fn.emitted_kernels = [("g0:program", whole)]
-        return fn, LoweringReport([rep], launches=1)
+        return fn, LoweringReport([rep], launches=1,
+                                  plan_error=str(err))
     gp = grouped_plan
     if gp is None:
         gp = (R.group_plan(pp, dims, blocks) if group

@@ -34,6 +34,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import resilience as RZ
+
 # families whose padded-bucket prefill is exactly correct: causal
 # attention masks the pad positions; an SSM scan would carry pad state
 # forward into real tokens
@@ -51,6 +53,11 @@ class Request:
     prompt: Tuple[int, ...]
     max_new_tokens: int
     arrival_step: int
+    # latest engine step this request may still be running at: past it,
+    # a queued request is dropped and an active one evicted (partial
+    # tokens recorded), each with a structured failure record.  None =
+    # no deadline (the default; synthetic traces set none)
+    deadline_step: Optional[int] = None
 
 
 def synth_trace(n_requests: int, *, seed: int = 0,
@@ -115,6 +122,20 @@ class ServeReport:
     warmup_compiles: int = 0
     decode_recompiles: int = 0   # steady-state compile growth; MUST be 0
     pallas_fallbacks: int = 0
+    # -- resilience counters (all zero on the clean path; pinned by
+    #    check_regression.py so the fault machinery never costs it) -----
+    n_poisoned: int = 0          # requests evicted by the finite-logits
+                                 # guard (prefill or decode)
+    n_deadline_evicted: int = 0  # requests dropped/evicted past deadline
+    degradations: int = 0        # ladder demotions over the run: compile
+                                 # ladder (resilience.METRICS delta) plus
+                                 # tick-watchdog decode demotions
+    quarantined: int = 0         # corrupt cache entries quarantined
+                                 # (CacheStats delta over the run)
+    # structured failure records: {"rid", "reason", "step", ...} — one
+    # per poison eviction / deadline / queue_full rejection / watchdog
+    # demotion, so a failed request is triageable, not just a counter
+    failures: List[dict] = field(default_factory=list)
     tokens: Dict[int, List[int]] = field(default_factory=dict)
     per_step: List[StepRecord] = field(default_factory=list)
 
@@ -135,6 +156,29 @@ class _Slot:
     remaining: int
     last_token: int
     generated: List[int]
+    deadline: Optional[int] = None
+
+
+def _demote_cfg(cfg):
+    """One watchdog rung down for the serving model: pallas pipeline ->
+    jax pipeline -> the non-pipeline xla kernels.  Returns
+    ``(new_cfg, label)`` or ``(None, None)`` at the bottom.  (The
+    interpreter rung is not servable here: the numpy reference kernels
+    cannot trace under the engine's jitted decode step.)"""
+    import dataclasses
+
+    opts = cfg.pipeline_options
+    if cfg.attn_impl != "pipeline" and cfg.mlp_impl != "pipeline":
+        return None, None
+    backend = opts.backend if opts is not None else cfg.pipeline_backend
+    if backend == "pallas":
+        new_opts = (opts.replace(backend="jax")
+                    if opts is not None else None)
+        return dataclasses.replace(cfg, pipeline_backend="jax",
+                                   pipeline_options=new_opts), "pipeline-jax"
+    return dataclasses.replace(cfg, attn_impl="xla",
+                               mlp_impl="fused_ref",
+                               pipeline_options=None), "xla"
 
 
 class Engine:
@@ -152,7 +196,8 @@ class Engine:
                  prompt_buckets: Sequence[int] = (8, 16, 32),
                  sampling: str = "greedy", temperature: float = 1.0,
                  seed: int = 0, keep_per_step: bool = True,
-                 strict_no_recompile: bool = True):
+                 strict_no_recompile: bool = True,
+                 max_queue: Optional[int] = None):
         import jax
 
         from repro.models import build_model
@@ -176,6 +221,10 @@ class Engine:
         self.temperature = float(temperature)
         self.keep_per_step = keep_per_step
         self.strict_no_recompile = strict_no_recompile
+        # bounded admission: arrivals past this queue depth are rejected
+        # with a structured failure record instead of building an
+        # unbounded backlog.  None = unbounded (the historical behavior)
+        self.max_queue = None if max_queue is None else int(max_queue)
         self._key = jax.random.key(seed)
 
         self.model = build_model(cfg)
@@ -199,8 +248,13 @@ class Engine:
         self.slots: List[Optional[_Slot]] = [None] * self.max_batch
         self.queue: deque = deque()
         self._warm_stats = None
+        self._base_stats = None      # cache counters at warmup start
+        self._base_metrics = None    # resilience.METRICS at warmup start
         self.warmup_compiles = 0
         self.pallas_fallbacks = 0
+        self.watchdog_demotions = 0  # tick-level decode demotions
+        self.demotion_compiles = 0   # compiles explained by demotions
+                                     # (excluded from decode_recompiles)
 
     # -- scheduling helpers -------------------------------------------------
     def _bucket(self, plen: int) -> Optional[int]:
@@ -240,6 +294,8 @@ class Engine:
         jnp = self._jax.numpy
         stats = pipeline.default_cache().stats
         before = stats.snapshot()
+        self._base_stats = before
+        self._base_metrics = RZ.METRICS.snapshot()
         with warnings.catch_warnings(record=True) as caught:
             warnings.simplefilter("always")
             for b in self.prompt_buckets:
@@ -260,30 +316,88 @@ class Engine:
         self._warm_stats = stats.snapshot()
         return self.warmup_compiles
 
-    def _admit(self, req: Request, slot: int, report: ServeReport) -> bool:
-        """Prefill ``req`` into ``slot``.  False = rejected (no bucket)."""
+    def _admit(self, req: Request, slot: int, report: ServeReport,
+               step: int = 0) -> str:
+        """Prefill ``req`` into ``slot``.  Returns a status:
+        ``"ok"`` (admitted or satisfied outright), ``"rejected"`` (bad
+        shape: no bucket, or prompt+generation exceed ``max_len``),
+        ``"deadline"`` (its deadline passed while queued), or
+        ``"poisoned"`` (the prompt prefilled to non-finite logits — the
+        slot stays free, co-batched sequences never see it)."""
         jnp = self._jax.numpy
         plen = len(req.prompt)
+        if req.deadline_step is not None and step > req.deadline_step:
+            report.failures.append({
+                "rid": req.rid, "reason": "deadline_queued", "step": step,
+                "deadline": req.deadline_step})
+            return "deadline"
         bucket = self._bucket(plen)
         if bucket is None or plen + req.max_new_tokens > self.max_len:
-            return False
+            report.failures.append({
+                "rid": req.rid, "reason": "bad_shape", "step": step,
+                "prompt_len": plen, "max_new_tokens": req.max_new_tokens})
+            return "rejected"
         padded = np.zeros((1, bucket), np.int32)
         padded[0, :plen] = req.prompt
         logits, cache = self._prefill(self.params, jnp.asarray(padded))
-        self.caches = self._insert(self.caches, cache, slot)
         # the prompt's next-token logits sit at the last REAL position;
         # pad positions to the right are causally invisible to it
-        first = self._sample(logits[:, plen - 1:plen])
+        row = logits[:, plen - 1:plen]
+        if not bool(jnp.all(jnp.isfinite(row))):
+            # poison prompt: never insert its cache, never occupy a slot
+            report.n_poisoned += 1
+            report.failures.append({
+                "rid": req.rid, "reason": "nonfinite_prefill",
+                "step": step, "prompt_len": plen})
+            return "poisoned"
+        self.caches = self._insert(self.caches, cache, slot)
+        first = self._sample(row)
         tok = int(first[0])
         if req.max_new_tokens <= 1:
             # the prefill's token satisfies the request outright
             report.tokens[req.rid] = [tok]
             report.n_completed += 1
-            return True
+            return "ok"
         self.slots[slot] = _Slot(rid=req.rid, pos=plen,
                                  remaining=req.max_new_tokens - 1,
-                                 last_token=tok, generated=[tok])
-        return True
+                                 last_token=tok, generated=[tok],
+                                 deadline=req.deadline_step)
+        return "ok"
+
+    def _decode_once(self):
+        jnp = self._jax.numpy
+        RZ.check("serve:decode")
+        return self._decode(
+            self.params, self.caches,
+            jnp.asarray(self._token_vector()[:, None]),
+            jnp.asarray(self._pos_vector()))
+
+    def _watchdog_demote(self, err: BaseException, step: int,
+                         report: ServeReport) -> None:
+        """The tick-level watchdog: the decode kernel raised, so rebuild
+        the decode step one ladder rung down (pallas pipeline -> jax
+        pipeline -> plain xla kernels) and keep serving.  Params and the
+        KV cache are impl-independent, so active sequences continue
+        in place; prefill kernels (which did not fail) stay as-is.
+        Raises the original error when there is no rung left."""
+        from repro.models import build_model
+
+        new_cfg, label = _demote_cfg(self.cfg)
+        if new_cfg is None:
+            raise err
+        jax = self._jax
+        self.cfg = new_cfg
+        self.model = build_model(new_cfg)
+        m = self.model
+        self._decode = jax.jit(m.decode_step)
+        self.watchdog_demotions += 1
+        report.failures.append({
+            "reason": "decode_demotion", "step": step, "to": label,
+            "error": f"{type(err).__name__}: {err}"})
+        warnings.warn(
+            f"serve watchdog: decode step failed "
+            f"({type(err).__name__}: {err}); demoted decode to {label} "
+            "and continuing", RuntimeWarning, stacklevel=2)
 
     def run(self, trace: Sequence[Request],
             max_steps: Optional[int] = None) -> ServeReport:
@@ -306,25 +420,68 @@ class Engine:
                 break
             t0 = time.perf_counter()
             while pending and pending[0].arrival_step <= step:
-                self.queue.append(pending.popleft())
+                req = pending.popleft()
+                if (self.max_queue is not None
+                        and len(self.queue) >= self.max_queue):
+                    # bounded admission: reject loudly instead of
+                    # building an unbounded backlog
+                    report.n_rejected += 1
+                    report.failures.append({
+                        "rid": req.rid, "reason": "queue_full",
+                        "step": step, "queue_depth": len(self.queue)})
+                else:
+                    self.queue.append(req)
             n_prefill = 0
             for slot in self._free_slots():
                 if not self.queue:
                     break
                 req = self.queue.popleft()
-                if self._admit(req, slot, report):
+                status = self._admit(req, slot, report, step)
+                if status == "ok":
                     n_prefill += 1
                     report.prefill_tokens += len(req.prompt)
                     report.decode_tokens += 1  # the prefill's first token
-                else:
+                elif status == "rejected":
                     report.n_rejected += 1
+                elif status == "deadline":
+                    report.n_deadline_evicted += 1
+                # "poisoned" is counted inside _admit; the slot stays
+                # free either way and co-batched sequences are untouched
             active = [i for i, s in enumerate(self.slots) if s is not None]
             n_decode = 0
             if active:
-                logits, self.caches = self._decode(
-                    self.params, self.caches,
-                    jnp.asarray(self._token_vector()[:, None]),
-                    jnp.asarray(self._pos_vector()))
+                try:
+                    logits, caches = self._decode_once()
+                except Exception as e:  # watchdog: demote, retry once
+                    before = stats.snapshot()
+                    self._watchdog_demote(e, step, report)
+                    logits, caches = self._decode_once()
+                    # the demoted decode's compiles are explained — keep
+                    # strict_no_recompile armed for *unexplained* ones
+                    self.demotion_compiles += stats.delta(before).compiles
+                    self._warm_stats = stats.snapshot()
+                self.caches = caches
+                spec = RZ.fire("serve:logits")
+                if spec is not None and spec.kind == "nan":
+                    # poison exactly one co-batched row; the guard below
+                    # must contain it to that sequence
+                    logits = logits.at[active[0], -1].set(jnp.nan)
+                # cheap post-step guard: one finite-check over the new
+                # logits row per slot, evict poisoned sequences instead
+                # of letting NaNs propagate through their KV cache
+                fin = np.asarray(jnp.all(jnp.isfinite(logits[:, -1]),
+                                         axis=-1))
+                for i in active:
+                    if bool(fin[i]):
+                        continue
+                    s = self.slots[i]
+                    report.n_poisoned += 1
+                    report.failures.append({
+                        "rid": s.rid, "reason": "nonfinite_logits",
+                        "step": step, "pos": s.pos})
+                    report.tokens[s.rid] = s.generated  # partial output
+                    self.slots[i] = None
+                active = [i for i in active if bool(fin[i])]
                 sampled = self._sample(logits)
                 for i in active:
                     s = self.slots[i]
@@ -341,6 +498,13 @@ class Engine:
                             report.n_evicted_stalled += 1
                         else:
                             report.n_completed += 1
+                        report.tokens[s.rid] = s.generated
+                        self.slots[i] = None
+                    elif s.deadline is not None and step >= s.deadline:
+                        report.n_deadline_evicted += 1
+                        report.failures.append({
+                            "rid": s.rid, "reason": "deadline",
+                            "step": step, "deadline": s.deadline})
                         report.tokens[s.rid] = s.generated
                         self.slots[i] = None
             wall_ms = (time.perf_counter() - t0) * 1e3
@@ -374,6 +538,12 @@ class Engine:
         report.warmup_compiles = self.warmup_compiles
         report.decode_recompiles = stats.delta(self._warm_stats).compiles
         report.pallas_fallbacks = self.pallas_fallbacks
+        # resilience counters over the whole engine lifetime (warmup
+        # included): compile-ladder demotions + watchdog demotions, and
+        # cache-integrity quarantines
+        report.degradations = (RZ.METRICS.delta(self._base_metrics)
+                               .demotions + self.watchdog_demotions)
+        report.quarantined = stats.delta(self._base_stats).quarantined
         if self.strict_no_recompile and report.decode_recompiles:
             raise RuntimeError(
                 f"{report.decode_recompiles} pipeline recompiles after "

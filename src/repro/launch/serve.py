@@ -41,6 +41,7 @@ class ServeConfig:
     max_batch: int = 4
     max_len: int = 96
     prompt_buckets: Tuple[int, ...] = (8, 16, 32)
+    max_queue: Optional[int] = None  # bounded admission; None = unbounded
     # -- synthetic open-loop trace -------------------------------------------
     n_requests: int = 16
     arrival_rate: float = 1.0    # requests per engine step
@@ -72,7 +73,8 @@ def build_engine(cfg: ServeConfig) -> Engine:
                   prompt_buckets=cfg.prompt_buckets,
                   sampling=cfg.sampling, temperature=cfg.temperature,
                   seed=cfg.seed, keep_per_step=cfg.keep_per_step,
-                  strict_no_recompile=cfg.strict_no_recompile)
+                  strict_no_recompile=cfg.strict_no_recompile,
+                  max_queue=cfg.max_queue)
 
 
 def run(cfg: ServeConfig) -> ServeReport:
@@ -98,6 +100,9 @@ def main(argv=None) -> ServeReport:
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=96)
     ap.add_argument("--buckets", type=int, nargs="+", default=[8, 16, 32])
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bounded admission: reject arrivals past this "
+                         "queue depth (default: unbounded)")
     ap.add_argument("--n-requests", type=int, default=16)
     ap.add_argument("--arrival-rate", type=float, default=1.0)
     ap.add_argument("--prompt-lens", type=int, nargs=2, default=[4, 24])
@@ -115,6 +120,7 @@ def main(argv=None) -> ServeReport:
                       backend=args.backend, max_batch=args.max_batch,
                       max_len=args.max_len,
                       prompt_buckets=tuple(args.buckets),
+                      max_queue=args.max_queue,
                       n_requests=args.n_requests,
                       arrival_rate=args.arrival_rate,
                       prompt_lens=tuple(args.prompt_lens),

@@ -11,6 +11,13 @@ plans).  ``CompileOptions`` is the frozen, hashable description of
 back-compat shim.  Model layers and benchmarks execute through this
 driver; it is the substrate later scaling work (sharding, batching,
 serving) compiles through.
+
+Failures degrade instead of aborting: lowering walks the resilience
+ladder (grouped -> ungrouped -> jax -> interpreter, see
+``repro.resilience``) under the ``CompileOptions.resilience`` policy,
+every attempt recorded in ``CompiledKernel.resilience_report``; corrupt
+on-disk cache entries are checksummed, quarantined, and counted in
+``CacheStats`` rather than silently recompiled.
 """
 
 from repro.pipeline.cache import (CODEGEN_VERSION, CacheKey, CachePlan,
@@ -18,9 +25,11 @@ from repro.pipeline.cache import (CODEGEN_VERSION, CacheKey, CachePlan,
                                   reset_default_cache)
 from repro.pipeline.driver import BACKENDS, CompiledKernel, compile
 from repro.pipeline.options import DEFAULT_OPTIONS, CompileOptions
+from repro.resilience import LADDER, LadderError, ResiliencePolicy
 
 __all__ = [
     "BACKENDS", "CODEGEN_VERSION", "CacheKey", "CachePlan", "CacheStats",
     "CompileOptions", "CompiledKernel", "DEFAULT_OPTIONS", "KernelCache",
+    "LADDER", "LadderError", "ResiliencePolicy",
     "compile", "default_cache", "reset_default_cache",
 ]

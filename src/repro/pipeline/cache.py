@@ -20,6 +20,17 @@ mtime, and after every write the oldest entries are evicted until the
 directory fits ``max_disk_bytes`` (default 1 GiB, overridable via
 ``$REPRO_KERNEL_CACHE_MAX_BYTES``; ``0``/negative disables eviction) —
 the cache no longer grows without bound.
+
+Integrity: every on-disk artifact is checksummed — plan JSON rides in a
+``{"schema", "sha256", "plan"}`` envelope, graph pickles carry a magic +
+sha256 header — and verified on read.  A corrupt, truncated, or
+wrong-schema entry is **quarantined** (moved to ``<cache>/quarantine/``
+for triage, never silently deleted), counted in :class:`CacheStats`
+(``corrupt_plans`` / ``corrupt_graphs`` / ``quarantined``), and logged
+with the offending path; the compile then proceeds as a miss.  Writes
+are crash-safe (unique temp file + fsync + atomic rename) and
+concurrent writers are serialized with a best-effort ``flock`` on
+``<cache>/.lock`` where the platform provides one.
 """
 
 from __future__ import annotations
@@ -28,13 +39,22 @@ import hashlib
 import json
 import os
 import pickle
-from dataclasses import asdict, dataclass, field
+import warnings
+from dataclasses import asdict, dataclass, field, fields
 from pathlib import Path
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.graph import Graph
 
-_SCHEMA_VERSION = 3  # v3: per-kernel ids + launch/residency provenance
+# v4: checksummed envelopes (plan JSON + graph pickle header) with
+# quarantine on mismatch.  Old unversioned artifacts hash to different
+# digests, so they are never read — just unreferenced bytes the LRU
+# eviction eventually clears.
+_SCHEMA_VERSION = 4
+
+# magic prefixing every graph pickle: 8 bytes tag + 32 bytes sha256 of
+# the payload that follows
+_GRAPH_MAGIC = b"RPRGRPH1"
 
 # Version salt for everything downstream of the graph fingerprint: fusion
 # rules, the selection cost model, and the three backend code generators.
@@ -151,6 +171,13 @@ class CacheStats:
     memory_hits: int = 0
     disk_hits: int = 0
     misses: int = 0
+    # -- integrity counters: every recovered-from error is named --------
+    corrupt_plans: int = 0    # unreadable/bad-checksum/bad-schema plan JSON
+    corrupt_graphs: int = 0   # unreadable/bad-checksum graph pickle
+    quarantined: int = 0      # files moved to <cache>/quarantine/
+    write_errors: int = 0     # failed plan/graph writes (entry skipped)
+    evict_errors: int = 0     # failed unlinks during LRU eviction
+    io_errors: int = 0        # failed stat/utime/scan (entry degraded)
 
     @property
     def compiles(self) -> int:
@@ -167,13 +194,65 @@ class CacheStats:
         return hits / total if total else 1.0
 
     def snapshot(self) -> "CacheStats":
-        return CacheStats(self.memory_hits, self.disk_hits, self.misses)
+        return CacheStats(**{f.name: getattr(self, f.name)
+                             for f in fields(self)})
 
     def delta(self, since: "CacheStats") -> "CacheStats":
         """Counter growth since a ``snapshot()``."""
-        return CacheStats(self.memory_hits - since.memory_hits,
-                          self.disk_hits - since.disk_hits,
-                          self.misses - since.misses)
+        return CacheStats(**{
+            f.name: getattr(self, f.name) - getattr(since, f.name)
+            for f in fields(self)})
+
+
+def _plan_envelope(plan: CachePlan) -> str:
+    payload = json.dumps(plan.to_json(), sort_keys=True)
+    digest = hashlib.sha256(payload.encode()).hexdigest()
+    return json.dumps({"schema": _SCHEMA_VERSION, "sha256": digest,
+                       "plan": json.loads(payload)})
+
+
+def _graph_blob(graph: Graph) -> bytes:
+    payload = pickle.dumps(graph)
+    return _GRAPH_MAGIC + hashlib.sha256(payload).digest() + payload
+
+
+class CacheIntegrityError(ValueError):
+    """An on-disk entry failed its schema or checksum guard."""
+
+
+def _read_plan(path: Path) -> CachePlan:
+    """Parse + verify a plan envelope; raises on any integrity failure
+    (missing file raises FileNotFoundError, a plain miss)."""
+    blob = path.read_bytes()
+    try:
+        env = json.loads(blob.decode("utf-8"))
+    except (ValueError, UnicodeDecodeError) as e:
+        raise CacheIntegrityError(f"unparseable JSON ({e})") from None
+    if not isinstance(env, dict) or "plan" not in env:
+        raise CacheIntegrityError("not a plan envelope")
+    if env.get("schema") != _SCHEMA_VERSION:
+        raise CacheIntegrityError(
+            f"schema {env.get('schema')!r} != {_SCHEMA_VERSION}")
+    payload = json.dumps(env["plan"], sort_keys=True)
+    digest = hashlib.sha256(payload.encode()).hexdigest()
+    if digest != env.get("sha256"):
+        raise CacheIntegrityError("checksum mismatch (corrupt/truncated)")
+    try:
+        return CachePlan.from_json(env["plan"])
+    except (KeyError, TypeError, ValueError) as e:
+        raise CacheIntegrityError(f"malformed plan ({e})") from None
+
+
+def _read_graph(path: Path) -> Graph:
+    blob = path.read_bytes()
+    head = len(_GRAPH_MAGIC) + 32
+    if len(blob) < head or not blob.startswith(_GRAPH_MAGIC):
+        raise CacheIntegrityError("graph pickle missing integrity header")
+    digest, payload = blob[len(_GRAPH_MAGIC):head], blob[head:]
+    if hashlib.sha256(payload).digest() != digest:
+        raise CacheIntegrityError(
+            "graph checksum mismatch (corrupt/truncated)")
+    return pickle.loads(payload)
 
 
 class KernelCache:
@@ -209,29 +288,133 @@ class KernelCache:
         d = key.digest()
         return self.root / f"{d}.json", self.root / f"{d}.graph.pkl"
 
+    @property
+    def quarantine_dir(self) -> Path:
+        return self.root / "quarantine"
+
+    def quarantine(self, path: Path, reason: str) -> None:
+        """Move a corrupt artifact aside for triage (never silently
+        delete it) and count it; falls back to unlink if the move
+        itself fails."""
+        qdir = self.quarantine_dir
+        try:
+            qdir.mkdir(parents=True, exist_ok=True)
+            path.replace(qdir / path.name)
+        except OSError:
+            try:
+                path.unlink()
+            except OSError as e:
+                self.stats.io_errors += 1
+                warnings.warn(
+                    f"kernel cache: could not quarantine OR remove "
+                    f"corrupt entry {path} ({e}); it will be re-read",
+                    RuntimeWarning, stacklevel=3)
+                return
+        self.stats.quarantined += 1
+        warnings.warn(
+            f"kernel cache: quarantined corrupt entry {path} -> "
+            f"{qdir / path.name} ({reason})", RuntimeWarning, stacklevel=3)
+
     def get_plan(self, key: CacheKey
                  ) -> Tuple[Optional[CachePlan], Optional[Graph]]:
-        """Returns (plan, selected_graph); graph may be None (plan-only)."""
+        """Returns (plan, selected_graph); graph may be None (plan-only).
+        A corrupt/truncated/stale-schema entry is quarantined, counted,
+        and treated as a miss — never silently swallowed."""
         if not self.disk:
             return None, None
         pj, pg = self._paths(key)
+        # fault injection (tests/chaos CI): genuinely garble the on-disk
+        # entry so the REAL integrity machinery below detects it
+        from repro import resilience as RZ
+        spec = RZ.fire("cache:get_plan")
+        if spec is not None and spec.kind == "corrupt" and pj.exists():
+            blob = pj.read_bytes()
+            pj.write_bytes(blob[:max(len(blob) // 2, 1)] + b"\xff{corrupt")
         try:
-            plan = CachePlan.from_json(json.loads(pj.read_text()))
-        except (OSError, ValueError, KeyError):
+            plan = _read_plan(pj)
+        except FileNotFoundError:
+            return None, None
+        except CacheIntegrityError as e:
+            self.stats.corrupt_plans += 1
+            warnings.warn(f"kernel cache: corrupt plan {pj}: {e}",
+                          RuntimeWarning, stacklevel=2)
+            self.quarantine(pj, str(e))
+            if pg.exists():  # its paired graph describes a dead plan
+                self.quarantine(pg, "paired with corrupt plan")
+            return None, None
+        except OSError as e:
+            self.stats.io_errors += 1
+            warnings.warn(f"kernel cache: unreadable plan {pj}: {e}",
+                          RuntimeWarning, stacklevel=2)
             return None, None
         graph: Optional[Graph] = None
         try:
-            with open(pg, "rb") as f:
-                graph = pickle.load(f)
-        except (OSError, pickle.PickleError, AttributeError):
-            graph = None
+            graph = _read_graph(pg)
+        except FileNotFoundError:
+            graph = None  # plan-only entry: expected, not an error
+        except (CacheIntegrityError, pickle.PickleError, AttributeError,
+                ImportError, EOFError, IndexError) as e:
+            self.stats.corrupt_graphs += 1
+            warnings.warn(f"kernel cache: corrupt graph {pg}: {e} "
+                          "(degrading to plan-only entry)",
+                          RuntimeWarning, stacklevel=2)
+            self.quarantine(pg, str(e))
+        except OSError as e:
+            self.stats.io_errors += 1
+            warnings.warn(f"kernel cache: unreadable graph {pg}: {e}",
+                          RuntimeWarning, stacklevel=2)
         for path in (pj, pg):  # LRU touch: a hit is recent use
             try:
                 os.utime(path)
             except OSError:
-                pass
+                self.stats.io_errors += 1  # missing graph lands here; fine
         self.stats.disk_hits += 1
         return plan, graph
+
+    def _lock(self):
+        """Best-effort inter-process write lock (<root>/.lock).  Returns
+        a context manager; a no-op where flock is unavailable."""
+        root = self.root
+
+        class _Lock:
+            def __enter__(self):
+                self.fd = None
+                try:
+                    import fcntl
+                    root.mkdir(parents=True, exist_ok=True)
+                    self.fd = os.open(str(root / ".lock"),
+                                      os.O_CREAT | os.O_RDWR)
+                    fcntl.flock(self.fd, fcntl.LOCK_EX)
+                except (ImportError, OSError):
+                    if self.fd is not None:
+                        os.close(self.fd)
+                        self.fd = None
+                return self
+
+            def __exit__(self, *exc):
+                if self.fd is not None:
+                    try:
+                        import fcntl
+                        fcntl.flock(self.fd, fcntl.LOCK_UN)
+                    except (ImportError, OSError):
+                        pass
+                    os.close(self.fd)
+                return False
+
+        return _Lock()
+
+    @staticmethod
+    def _atomic_write(path: Path, data: bytes) -> None:
+        """Crash-safe write: unique temp file (no cross-process tmp-name
+        collisions) + fsync + atomic rename."""
+        tmp = path.parent / f"{path.name}.{os.getpid()}.tmp"
+        fd = os.open(str(tmp), os.O_CREAT | os.O_WRONLY | os.O_TRUNC)
+        try:
+            os.write(fd, data)
+            os.fsync(fd)
+        finally:
+            os.close(fd)
+        tmp.replace(path)
 
     def put_plan(self, key: CacheKey, plan: CachePlan,
                  graph: Optional[Graph]) -> None:
@@ -241,23 +424,30 @@ class KernelCache:
         if not self.disk:
             return
         pj, pg = self._paths(key)
-        try:
-            self.root.mkdir(parents=True, exist_ok=True)
-            tmp = pj.with_suffix(".json.tmp")
-            tmp.write_text(json.dumps(plan.to_json()))
-            tmp.replace(pj)
-        except OSError:
-            return
-        if graph is not None:
+        with self._lock():
             try:
-                tmpg = pg.with_suffix(".pkl.tmp")
-                with open(tmpg, "wb") as f:
-                    pickle.dump(graph, f)
-                tmpg.replace(pg)
-            except (OSError, pickle.PickleError, TypeError,
-                    AttributeError):
-                pass  # plan-only entry: fusion reruns on a disk hit
-        self.evict()
+                self.root.mkdir(parents=True, exist_ok=True)
+                self._atomic_write(pj, _plan_envelope(plan).encode())
+            except OSError as e:
+                self.stats.write_errors += 1
+                warnings.warn(f"kernel cache: failed to write plan {pj}: "
+                              f"{e} (entry not cached)",
+                              RuntimeWarning, stacklevel=2)
+                return
+            if graph is not None:
+                try:
+                    self._atomic_write(pg, _graph_blob(graph))
+                except (OSError, pickle.PickleError, TypeError,
+                        AttributeError) as e:
+                    # plan-only entry: fusion reruns on a disk hit.
+                    # Un-picklable MiscNode closures land here routinely,
+                    # so count + warn but keep the plan
+                    self.stats.write_errors += 1
+                    warnings.warn(
+                        f"kernel cache: failed to write graph {pg}: {e} "
+                        "(plan-only entry; fusion reruns on hit)",
+                        RuntimeWarning, stacklevel=2)
+            self.evict()
 
     # -- eviction -----------------------------------------------------------
     def disk_entries(self) -> List[Tuple[str, float, int]]:
@@ -265,7 +455,10 @@ class KernelCache:
         out = []
         try:
             plans = sorted(self.root.glob("*.json"))
-        except OSError:
+        except OSError as e:
+            self.stats.io_errors += 1
+            warnings.warn(f"kernel cache: cannot scan {self.root}: {e}",
+                          RuntimeWarning, stacklevel=2)
             return []
         for pj in plans:
             digest = pj.name[:-len(".json")]
@@ -274,7 +467,7 @@ class KernelCache:
                 try:
                     st = path.stat()
                 except OSError:
-                    continue
+                    continue  # unpaired graph / racing eviction: normal
                 mtime = max(mtime, st.st_mtime)
                 size += st.st_size
             out.append((digest, mtime, size))
@@ -296,8 +489,13 @@ class KernelCache:
                          self.root / f"{digest}.graph.pkl"):
                 try:
                     path.unlink()
-                except OSError:
-                    pass
+                except FileNotFoundError:
+                    pass  # plan-only entry / concurrent eviction
+                except OSError as e:
+                    self.stats.evict_errors += 1
+                    warnings.warn(
+                        f"kernel cache: failed to evict {path}: {e}",
+                        RuntimeWarning, stacklevel=2)
             total -= size
             evicted += 1
         return evicted

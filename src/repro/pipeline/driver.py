@@ -43,6 +43,7 @@ only re-lower.
 from __future__ import annotations
 
 import functools
+import time
 import warnings
 from dataclasses import dataclass, replace
 from math import lcm
@@ -50,6 +51,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import resilience as RZ
 from repro.core import calibrate as CAL
 from repro.core import numerics as NU
 from repro.core import selection as SEL
@@ -95,6 +97,11 @@ class CompiledKernel:
     # is always among them)
     measured_s: Optional[float] = None
     autotune_timings: Optional[Tuple] = None
+    # fault provenance (resilience.ResilienceReport): the rung requested,
+    # the rung that actually served the compile, and every ladder attempt
+    # in between — present on every compile (the happy path is a single
+    # ok attempt at the requested rung, zero demotions)
+    resilience_report: Optional[Any] = None
 
     def __call__(self, inputs: Dict[str, Any]) -> Dict[str, Any]:
         missing = [n for n in self.in_names if n not in inputs]
@@ -119,6 +126,13 @@ class CompiledKernel:
         round-tripping through global memory (pallas grouped lowering)."""
         return (self.lowering_report.resident_edges
                 if self.lowering_report is not None else None)
+
+    @property
+    def rung(self) -> Optional[str]:
+        """The degradation-ladder rung that served this compile
+        (``"grouped"``/``"ungrouped"``/``"jax"``/``"interpreter"``)."""
+        return (self.resilience_report.rung
+                if self.resilience_report is not None else None)
 
     @property
     def grouped_cost(self) -> Optional[float]:
@@ -181,14 +195,18 @@ def _lower_jax(g: Graph, dims: Dict[str, int], jit):
 
 def _region_plan(g: Graph):
     """Partition the selected snapshot once; the plan is shared between
-    per-kernel cost attribution and the Pallas lowering.  ``None`` when
-    the partitioner cannot split (emit_program then takes the
-    whole-program fallback)."""
+    per-kernel cost attribution and the Pallas lowering.  Returns
+    ``(plan, error)``: when the partitioner cannot split, ``plan`` is
+    ``None`` and ``error`` carries the ``RegionError`` text — recorded in
+    ``LoweringReport.plan_error`` / ``ResilienceReport.plan_error`` so
+    the demotion to emit_program's whole-program fallback is visible to
+    ``check_regression.py`` and the serve warmup checks instead of being
+    silently swallowed here."""
     from repro.core import regions as REG
     try:
-        return REG.plan_program(g)
-    except REG.RegionError:
-        return None
+        return REG.plan_program(g), None
+    except REG.RegionError as err:
+        return None, str(err)
 
 
 def _grouped_plan(pplan, dims: Dict[str, int],
@@ -239,6 +257,79 @@ def _lower_pallas(g: Graph, dims: Dict[str, int],
     # runners the timing harness (core/timing.region_times) needs
     call.raw_program = f
     return call, report
+
+
+def _rung_thunk(rung: str, g: Graph, dims: Dict[str, int], *,
+                blocks: Optional[Dict[str, int]], interpret, jit,
+                pplan, gplan, group: bool) -> Callable[[], Tuple]:
+    """The lowering a ladder rung runs; every thunk returns
+    ``(call, LoweringReport-or-None)``.  ``gplan`` is only reusable at
+    the rung it was packed for — a demoted rung recomputes its own."""
+    if rung == "grouped":
+        return lambda: _lower_pallas(
+            g, dims, blocks, interpret, program_plan=pplan,
+            grouped_plan=gplan if group else None, group=True,
+            jit=bool(jit))
+    if rung == "ungrouped":
+        return lambda: _lower_pallas(
+            g, dims, blocks, interpret, program_plan=pplan,
+            grouped_plan=None if group else gplan, group=False,
+            jit=bool(jit))
+    if rung == "jax":
+        return lambda: (_lower_jax(g, dims, jit), None)
+    return lambda: (_lower_py(g, dims), None)
+
+
+def _ladder_lower(rungs: Tuple[str, ...], make_thunk: Callable,
+                  policy, rr) -> Tuple:
+    """Attempt each allowed rung in order — ``policy.retries`` extra
+    same-rung tries with exponential backoff, each attempt optionally
+    under ``policy.attempt_timeout_s`` — recording every attempt in the
+    :class:`resilience.ResilienceReport` ``rr``.  Returns the first
+    successful rung's ``(call, report)``; raises
+    :class:`resilience.LadderError` when every rung is exhausted.
+
+    The default policy costs the happy path nothing: no timeout means no
+    worker thread, zero retries means no sleep — one ``try`` around the
+    lowering call that already existed."""
+    last: Optional[BaseException] = None
+    for ri, rung in enumerate(rungs):
+        thunk = make_thunk(rung)
+
+        def attempt(rung=rung, thunk=thunk):
+            RZ.check(f"compile:{rung}")
+            return thunk()
+
+        for retry in range(policy.retries + 1):
+            if retry:
+                time.sleep(policy.backoff_s * (2 ** (retry - 1)))
+            t0 = time.perf_counter()
+            try:
+                res = (RZ.run_with_timeout(attempt,
+                                           policy.attempt_timeout_s)
+                       if policy.attempt_timeout_s is not None
+                       else attempt())
+            except Exception as e:  # any lowering failure demotes
+                last = e
+                rr.attempts.append(RZ.Attempt(
+                    rung, False, time.perf_counter() - t0,
+                    error=f"{type(e).__name__}: {e}", retry=retry,
+                    timed_out=isinstance(e, RZ.AttemptTimeout)))
+                continue
+            rr.attempts.append(RZ.Attempt(
+                rung, True, time.perf_counter() - t0, retry=retry))
+            rr.rung = rung
+            return res
+        if ri + 1 < len(rungs):
+            RZ.METRICS.demotions += 1
+            warnings.warn(
+                f"compile ladder: rung {rung!r} failed "
+                f"({rr.attempts[-1].error}); demoting to "
+                f"{rungs[ri + 1]!r}", RuntimeWarning, stacklevel=3)
+    RZ.METRICS.ladder_failures += 1
+    raise RZ.LadderError(
+        f"every allowed ladder rung failed ({rr.summary()}); "
+        f"last error: {last}", rr)
 
 
 def _measure_harness(graph: Graph,
@@ -429,6 +520,7 @@ def compile(graph: Graph, dims: Optional[Dict[str, int]] = None, *,
     snaps: Optional[List[Graph]] = None
     pplan = None  # shared region partition (pallas cache-miss path)
     gplan = None  # shared region grouping (costing + lowering)
+    plan_err = None  # RegionError text when the partitioner couldn't split
     timings = None
     measure = None
     # the pallas grouped lowering runs the grouped megakernel schedule,
@@ -477,7 +569,7 @@ def compile(graph: Graph, dims: Optional[Dict[str, int]] = None, *,
         rcosts = kids = None
         launches = resident = None
         if backend == "pallas" and blocks is not None:
-            pplan = _region_plan(selected_graph)
+            pplan, plan_err = _region_plan(selected_graph)
             gplan = _grouped_plan(pplan, sel.dims, blocks, group)
             if gplan is not None:
                 rcosts = SEL.region_costs(selected_graph, sel.dims,
@@ -516,6 +608,9 @@ def compile(graph: Graph, dims: Optional[Dict[str, int]] = None, *,
     # driver; if the winner's kernel is lowering-identical to what we
     # would emit (same backend, and for pallas the same block extents),
     # reuse it instead of recompiling the same plan
+    policy = o._policy()
+    start = RZ.start_rung(backend, bool(group))
+    rr = RZ.ResilienceReport(requested=start, plan_error=plan_err)
     fn = report = None
     if measure is not None:
         cand = measure.kernels.get(tuple(sorted(use_dims.items())))
@@ -523,17 +618,35 @@ def compile(graph: Graph, dims: Optional[Dict[str, int]] = None, *,
                 backend != "pallas"
                 or cand.blocks == (dict(blocks) if blocks else None)):
             fn, report = cand._fn, cand.lowering_report
-    if fn is not None:
-        pass
-    elif backend == "py":
-        fn = _lower_py(selected_graph, use_dims)
-    elif backend == "jax":
-        fn = _lower_jax(selected_graph, use_dims, jit)
-    else:
-        fn, report = _lower_pallas(selected_graph, use_dims, blocks,
-                                   interpret, program_plan=pplan,
-                                   grouped_plan=gplan, group=group,
-                                   jit=jit)
+            # the sweep compiled it through this driver; adopt its
+            # provenance instead of claiming a fresh zero-cost attempt
+            rr = cand.resilience_report or rr
+    if fn is None:
+        # configuration errors are the caller's, not the ladder's: raise
+        # before any rung runs instead of demoting past them
+        if backend == "pallas":
+            if blocks is None:
+                raise ValueError(
+                    "backend='pallas' needs per-dim block sizes: pass "
+                    "blocks=")
+            missing = [d for d in use_dims if d not in blocks]
+            if missing:
+                raise ValueError(
+                    f"blocks missing sizes for dims {missing}")
+        fn, report = _ladder_lower(
+            RZ.rungs_from(start, policy.max_rung),
+            functools.partial(_rung_thunk, g=selected_graph,
+                              dims=use_dims, blocks=blocks,
+                              interpret=interpret, jit=jit, pplan=pplan,
+                              gplan=gplan, group=group),
+            policy, rr)
+    # thread the partitioner's RegionError (or emit_program's own
+    # whole-program fallback, on the disk-hit path where the driver
+    # never partitioned) through both provenance records
+    if report is not None and report.plan_error is None and plan_err:
+        report.plan_error = plan_err
+    if report is not None and report.plan_error and not rr.plan_error:
+        rr.plan_error = report.plan_error
 
     # emission may diverge from the planned grouping (a group the
     # emitter cannot express degrades to per-region kernels): the
@@ -570,6 +683,7 @@ def compile(graph: Graph, dims: Optional[Dict[str, int]] = None, *,
         out_names=[n for n, _ in out_info], _fn=fn,
         lowering_report=report, region_costs=plan.region_costs,
         kernel_ids=plan.kernel_ids,
-        measured_s=plan.measured_s, autotune_timings=timings)
+        measured_s=plan.measured_s, autotune_timings=timings,
+        resilience_report=rr)
     cache.put_kernel(key, kern)
     return kern

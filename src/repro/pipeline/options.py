@@ -72,6 +72,12 @@ class CompileOptions:
     # calibration profile override (CalibrationProfile); participates in
     # hashing/equality via its digest, not object identity
     profile: Optional[Any] = None
+    # degradation-ladder policy (resilience.ResiliencePolicy): how far a
+    # failing compile may demote (grouped -> ungrouped -> jax ->
+    # interpreter), per-attempt timeout, retry budget.  None = the
+    # default policy (full ladder, no timeout, no retries), which keeps
+    # cache keys byte-identical to pre-resilience builds
+    resilience: Optional[Any] = None
 
     def __post_init__(self):
         for name in _MAP_FIELDS:
@@ -90,6 +96,12 @@ class CompileOptions:
     def _profile_digest(self) -> Optional[str]:
         return self.profile.digest() if self.profile is not None else None
 
+    def _policy(self):
+        """The effective ResiliencePolicy (``None`` -> the default)."""
+        from repro import resilience as RZ
+        return (self.resilience if self.resilience is not None
+                else RZ.DEFAULT_POLICY)
+
     def key(self) -> Tuple:
         """Canonical value tuple: what equality and hashing mean."""
         return (self.backend, self.blocks, self.item_bytes, self.fused,
@@ -97,7 +109,7 @@ class CompileOptions:
                 self.jit if self.jit == "per-op" else bool(self.jit),
                 self.stabilize, self.autotune, int(self.top_k),
                 int(self.measure_repeats), bool(self.group),
-                self._profile_digest())
+                self._profile_digest(), self._policy().key())
 
     def __hash__(self) -> int:
         return hash(self.key())
@@ -152,6 +164,14 @@ class CompileOptions:
             # a different calibration profile can select a different
             # snapshot/dims: never serve its plan under the default's key
             opts += (("profile", profile.digest()),)
+        from repro import resilience as RZ
+        policy = self._policy()
+        if policy != RZ.DEFAULT_POLICY:
+            # a bounded ladder (max_rung above interpreter) or a timeout
+            # can change which rung's kernel gets cached in-process;
+            # keyed only when non-default so existing keys stay
+            # byte-identical
+            opts += (("resilience", policy.key()),)
         return opts
 
 
