@@ -37,7 +37,10 @@ requests, warmup compile count) are pinned **exactly** — the synthetic
 trace is seeded, so any drift is a scheduler behaviour change — while
 **decode recompiles** and **Pallas fallbacks** must be zero on every
 current serve row, pinned or not (one persistent megakernel per shape
-bucket is the whole point of the serving tentpole).  Throughput
+bucket is the whole point of the serving tentpole), and so must the
+resilience and self-healing counters (``degradations``,
+``quarantined``, ``repromotions``, ``probes``, ``probe_failures`` —
+the clean path never demotes, never probes, never heals).  Throughput
 (``tokens_per_s``) gets the same generous same-machine treatment as the
 speedup ratio: only a >1.5x collapse below the pin fails.
 
@@ -68,13 +71,17 @@ GATED_KEYS = ("pred_traffic_reduction", "pallas_regions",
               "region_spearman")
 # serving rows: exact pins for the deterministic scheduler counters,
 # ratio-gated throughput, and the zero-recompile / zero-fallback pins.
-# degradations/quarantined are the resilience counters: pinned at zero
-# on the clean path (the fault machinery must never cost the happy path)
+# degradations/quarantined are the resilience counters, and
+# repromotions/probes/probe_failures the self-healing counters: all
+# pinned at zero on the clean path (neither the fault machinery nor the
+# health ledger may cost the happy path)
 GATED_SERVE_KEYS = ("tokens_per_s", "completed", "rejected", "stalled",
                     "warmup_compiles", "decode_recompiles",
-                    "pallas_fallbacks", "degradations", "quarantined")
+                    "pallas_fallbacks", "degradations", "quarantined",
+                    "repromotions", "probes", "probe_failures")
 SERVE_EXACT_KEYS = ("completed", "rejected", "stalled", "warmup_compiles",
-                    "degradations", "quarantined")
+                    "degradations", "quarantined", "repromotions",
+                    "probes", "probe_failures")
 
 
 def _parse_derived(derived: str) -> dict:
@@ -257,7 +264,8 @@ def main(argv) -> int:
     # (or a region that falls off the megakernel path) always fails
     for name, cur in sorted(cur_srv.items()):
         for k in ("decode_recompiles", "pallas_fallbacks",
-                  "degradations", "quarantined"):
+                  "degradations", "quarantined", "repromotions",
+                  "probes", "probe_failures"):
             v = cur.get(k)
             if v is not None and v != "0":
                 failures.append(f"{name}: {k}={v} (must be 0)")

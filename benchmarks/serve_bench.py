@@ -28,6 +28,15 @@ gates internally:
   ``n_poisoned`` matches the NaN faults;
 * chaos tokens/sec stays within the same 1.5x collapse gate, measured
   against this runner's own clean pass.
+
+Heal mode (``--faults heal``, the CI ``chaos`` job's second step) drives
+the self-healing loop end-to-end: a transient decode fault fires once
+and stops, the watchdog demotes decode to the jax rung, and the health
+ledger's half-open probe must re-promote back to the grouped pallas
+rung mid-run — with the first probe itself faulted, so the breaker
+re-opens at doubled cool-down before the second probe heals.  Gates pin
+``repromotions`` / ``probes`` / ``probe_failures`` EXACTLY against the
+plan and require tokens byte-identical to the clean pass.
 """
 
 from __future__ import annotations
@@ -75,6 +84,20 @@ def _chaos_plan():
     ], seed=0)
 
 
+# the seeded heal plan: one transient decode fault (fires once, then
+# the rung is healthy again) plus one faulted re-promotion probe, so
+# the breaker re-opens at doubled cool-down before the second probe
+# swaps the pallas rung back in
+def _heal_plan():
+    from repro import resilience as RZ
+    return RZ.FaultPlan([
+        RZ.FaultSpec(site="serve:decode", indices=(2,), kind="raise",
+                     message="heal: transient decode fault"),
+        RZ.FaultSpec(site="serve:probe", indices=(0,), kind="raise",
+                     message="heal: probe still cold"),
+    ], seed=0)
+
+
 def _row(preset: str, cfg, report) -> dict:
     total_tokens = report.prefill_tokens + report.decode_tokens
     us_per_token = (report.wall_s * 1e6 / max(report.decode_tokens, 1))
@@ -96,6 +119,9 @@ def _row(preset: str, cfg, report) -> dict:
         f"degradations={report.degradations}",
         f"quarantined={report.quarantined}",
         f"poisoned={report.n_poisoned}",
+        f"repromotions={report.repromotions}",
+        f"probes={report.probes}",
+        f"probe_failures={report.probe_failures}",
         f"cache_hit_rate={report.cache_hit_rate:.3f}",
     ])
     return {"name": f"serve_{cfg.arch}_{preset}",
@@ -191,11 +217,97 @@ def chaos(preset: str) -> dict:
             "failures": failures, "plan": plan.to_json()}
 
 
+def heal(preset: str) -> dict:
+    """The self-healing harness: clean pass, then the same preset under
+    a transient decode fault plus a faulted first probe, with a short
+    re-promotion window.  Gates pin the full breaker lifecycle —
+    demote -> failed probe (doubled cool-down) -> successful probe ->
+    re-promotion to the grouped pallas rung — EXACTLY against the plan."""
+    import dataclasses
+
+    from repro import pipeline, resilience as RZ
+    from repro.launch.serve import run
+
+    # a short probe window so the lifecycle completes inside the preset
+    # trace: demote ~tick 2, failed probe 3 ticks later, breaker doubles
+    # to 6, healing probe ~tick 12
+    cfg = dataclasses.replace(_presets()[preset], repromote_after=3)
+    cache_dir = tempfile.mkdtemp(prefix="repro-heal-cache-")
+    os.environ["REPRO_KERNEL_CACHE"] = cache_dir
+    pipeline.reset_default_cache()
+
+    clean = run(cfg)
+    pipeline.reset_default_cache()
+    plan = _heal_plan()
+    with RZ.faults(plan):
+        faulted = run(cfg)
+
+    failures = []
+
+    def gate(ok: bool, what: str):
+        if not ok:
+            failures.append(what)
+
+    n_decode = plan.expected_count("serve:decode")
+    n_probe_faults = plan.expected_count("serve:probe")
+
+    gate(plan.fired_count() == len(plan.specs),
+         f"every planned fault fires (fired {plan.fired_count()}/"
+         f"{len(plan.specs)}: {plan.fired})")
+    gate(faulted.degradations == n_decode,
+         f"watchdog demotions match the plan "
+         f"({faulted.degradations} != {n_decode})")
+    gate(faulted.repromotions == n_decode,
+         f"every demotion healed: re-promotions match the plan "
+         f"({faulted.repromotions} != {n_decode})")
+    gate(faulted.probe_failures == n_probe_faults,
+         f"probe failures match the plan "
+         f"({faulted.probe_failures} != {n_probe_faults})")
+    gate(faulted.probes == n_decode + n_probe_faults,
+         f"probe count matches the plan: one per planned probe fault "
+         f"plus one healing probe ({faulted.probes} != "
+         f"{n_decode + n_probe_faults})")
+    gate(faulted.decode_backend == "pipeline-pallas",
+         f"decode ended the run back on the grouped pallas rung "
+         f"(ended on {faulted.decode_backend!r})")
+    gate(faulted.n_completed == clean.n_completed,
+         f"a transient fault poisons nothing: all requests complete "
+         f"({faulted.n_completed} != {clean.n_completed})")
+    mismatched = [r for r in clean.tokens
+                  if clean.tokens[r] != faulted.tokens.get(r)]
+    gate(not mismatched,
+         f"tokens byte-identical to the clean run across demote AND "
+         f"re-promote (mismatched rids {mismatched})")
+    gate(faulted.decode_recompiles == 0,
+         f"demotion/probe compiles stay off the strict-no-recompile "
+         f"books ({faulted.decode_recompiles} != 0)")
+    gate(faulted.quarantined == 0 and faulted.n_poisoned == 0,
+         f"no cache or numeric casualties (quarantined="
+         f"{faulted.quarantined} poisoned={faulted.n_poisoned})")
+    # no 1.5x throughput gate here: the heal pass pays two mid-run jit
+    # rebuilds (the demotion build and the probe re-compile) inside a
+    # deliberately tiny CI trace, so wall time is compile-dominated by
+    # design.  A 20x collapse guard still catches hangs and pathological
+    # probe loops
+    gate(faulted.tokens_per_s >= clean.tokens_per_s / 20.0,
+         f"heal tokens/sec within the 20x hang guard "
+         f"({faulted.tokens_per_s:.1f} vs clean {clean.tokens_per_s:.1f})")
+    gate(clean.repromotions == 0 and clean.probes == 0
+         and clean.probe_failures == 0 and clean.degradations == 0,
+         f"clean pass has zero self-healing counters (repromotions="
+         f"{clean.repromotions} probes={clean.probes} probe_failures="
+         f"{clean.probe_failures} degradations={clean.degradations})")
+
+    row = _row(f"{preset}_heal", cfg, faulted)
+    return {"row": row, "report": faulted, "clean": clean,
+            "failures": failures, "plan": plan.to_json()}
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--preset", default="ci", choices=sorted(PRESET_ARGS))
-    ap.add_argument("--faults", default=None, choices=("chaos",),
-                    help="run the seeded chaos harness instead of the "
+    ap.add_argument("--faults", default=None, choices=("chaos", "heal"),
+                    help="run a seeded fault harness instead of the "
                          "clean bench (gates internally, exit 1 on any "
                          "gate failure)")
     ap.add_argument("--json", dest="json_out", default=None,
@@ -204,18 +316,19 @@ def main(argv=None) -> int:
                     help="write the full ServeReport JSON")
     args = ap.parse_args(argv)
 
-    if args.faults == "chaos":
-        out = chaos(args.preset)
+    if args.faults in ("chaos", "heal"):
+        out = (chaos if args.faults == "chaos" else heal)(args.preset)
         row, report = out["row"], out["report"]
         print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
         for f in out["failures"]:
-            print(f"CHAOS GATE FAILED: {f}")
+            print(f"{args.faults.upper()} GATE FAILED: {f}")
         if not out["failures"]:
-            print(f"chaos gates passed: {len(out['plan']['faults'])} "
-                  "faults injected, every counter matched the plan")
+            print(f"{args.faults} gates passed: "
+                  f"{len(out['plan']['faults'])} faults injected, every "
+                  "counter matched the plan")
         if args.report:
             with open(args.report, "w") as fh:
-                json.dump({"chaos": report.to_json(),
+                json.dump({args.faults: report.to_json(),
                            "clean": out["clean"].to_json(),
                            "plan": out["plan"],
                            "failures": out["failures"]}, fh, indent=1)

@@ -416,3 +416,66 @@ with RZ.faults(both_down), warnings.catch_warnings():
               f"{len(e.report.attempts)} attempts, "
               f"last rung {e.report.attempts[-1].rung!r} "
               f"(retries included)")
+
+# 14. self-healing: failures in 13 are not forever.  Every compile
+#     failure is also recorded in a per-(graph, rung) HEALTH LEDGER — a
+#     circuit breaker persisted as checksummed envelopes under
+#     <cache>/health/, shared across processes and restarts.  After
+#     breaker_threshold consecutive failures a rung OPENS and later
+#     compiles of the same graph skip it instantly (no timeout burned,
+#     no recompile attempted); after an exponential cool-down
+#     (breaker_cooldown_s, doubling per trip up to
+#     breaker_cooldown_max_s) the next compile becomes a HALF-OPEN
+#     PROBE that re-tries the rung for real — success closes the
+#     breaker and deletes the entry, failure re-opens it at doubled
+#     cool-down.  The serving engine runs the same lifecycle on its
+#     decode ladder: after `repromote_after` clean ticks on a demoted
+#     rung, a probe re-compiles the original OFF the hot path, checks
+#     its logits are finite, and swaps it back mid-run
+#     (ServeReport.repromotions / probes / probe_failures; the CI
+#     `chaos` job's heal step pins the full demote -> failed probe ->
+#     doubled cool-down -> re-promotion arc against a seeded plan).
+#
+#     Triage knobs, in the order you reach for them:
+#       * ResiliencePolicy(breaker_threshold=...) — consecutive
+#         failures before a rung opens; 0 disables the breaker.
+#       * breaker_cooldown_s / breaker_cooldown_max_s — the probe
+#         cadence (doubles per trip, capped).
+#       * cache.health.entries() — every open/half-open rung on disk:
+#         failures, trips, cool-down, last error (the triage view).
+#       * cache.health.stats — reads/writes/skipped_open/probes; ALL
+#         ZERO on the happy path (no ledger I/O until a rung fails —
+#         <cache>/health/ is not even created).
+#       * Engine(repromote_after=N) / serve --repromote-after N — clean
+#         decode ticks before a re-promotion probe; 0/None disables.
+#     The cache also self-repairs at startup: KernelCache() sweeps
+#     orphaned *.tmp files from crashed writers, removes stale unheld
+#     .lock files, and caps <cache>/quarantine/ at a byte budget
+#     ($REPRO_QUARANTINE_MAX_BYTES), counting every action in
+#     CacheStats.recovered_tmp / stale_locks / quarantine_evicted.
+hcache = pipeline.KernelCache(disk=False)  # in-memory demo ledger
+flaky = RZ.FaultPlan([RZ.FaultSpec(site="compile:jax", indices=(0, 1))])
+jax_opts = pipeline.CompileOptions(
+    backend="jax",
+    resilience=RZ.ResiliencePolicy(breaker_threshold=2,
+                                   breaker_cooldown_s=3600.0))
+with RZ.faults(flaky), warnings.catch_warnings():
+    warnings.simplefilter("ignore")
+    pipeline.compile(multi, mdims, options=jax_opts, cache=hcache)
+    pipeline.compile(multi, {**mdims, "M": 8}, options=jax_opts,
+                     cache=hcache)     # second failure -> breaker opens
+    k_skip = pipeline.compile(multi, {**mdims, "M": 16},
+                              options=jax_opts, cache=hcache)
+print()
+print("self-healing: tripped the jax-rung breaker ->")
+print(f"  {k_skip.resilience_report.summary()}")
+assert k_skip.resilience_report.skipped_open == 1   # skipped, not run
+# fast-forward the ledger's (injectable) clock past the cool-down: the
+# NEXT compile becomes a half-open probe, and with the fault plan
+# exhausted it succeeds and heals the rung
+hcache.health.clock = lambda: float("inf")
+k_heal = pipeline.compile(multi, {**mdims, "M": 32}, options=jax_opts,
+                          cache=hcache)
+assert k_heal.rung == "jax" and k_heal.resilience_report.probes == 1
+print(f"  probe healed the rung: served by {k_heal.rung!r}, "
+      f"breaker {hcache.health.state(multi.fingerprint(), 'jax')!r}")

@@ -132,6 +132,14 @@ class ServeReport:
                                  # tick-watchdog decode demotions
     quarantined: int = 0         # corrupt cache entries quarantined
                                  # (CacheStats delta over the run)
+    # -- self-healing counters (the inverse of the watchdog) ------------
+    repromotions: int = 0        # demoted decode rungs probed healthy and
+                                 # swapped back in mid-run
+    probes: int = 0              # half-open re-promotion probes attempted
+    probe_failures: int = 0      # probes that failed (breaker re-opened
+                                 # at doubled cool-down)
+    decode_backend: str = ""     # the rung decode ended the run on
+                                 # (e.g. "pipeline-pallas" when healed)
     # structured failure records: {"rid", "reason", "step", ...} — one
     # per poison eviction / deadline / queue_full rejection / watchdog
     # demotion, so a failed request is triageable, not just a counter
@@ -181,6 +189,17 @@ def _demote_cfg(cfg):
                                pipeline_options=None), "xla"
 
 
+def _backend_label(cfg) -> str:
+    """The serving-ladder rung label of a model config, matching the
+    labels ``_demote_cfg`` hands out (``pipeline-pallas`` /
+    ``pipeline-jax`` / ``xla``)."""
+    if cfg.attn_impl != "pipeline" and cfg.mlp_impl != "pipeline":
+        return "xla"
+    opts = cfg.pipeline_options
+    backend = opts.backend if opts is not None else cfg.pipeline_backend
+    return f"pipeline-{backend}"
+
+
 class Engine:
     """Slot-based continuous-batching scheduler over ``models.lm.LM``.
 
@@ -197,9 +216,11 @@ class Engine:
                  sampling: str = "greedy", temperature: float = 1.0,
                  seed: int = 0, keep_per_step: bool = True,
                  strict_no_recompile: bool = True,
-                 max_queue: Optional[int] = None):
+                 max_queue: Optional[int] = None,
+                 repromote_after: Optional[int] = 8):
         import jax
 
+        from repro import pipeline
         from repro.models import build_model
 
         if cfg.family not in _SUPPORTED_FAMILIES:
@@ -226,6 +247,57 @@ class Engine:
         # unbounded backlog.  None = unbounded (the historical behavior)
         self.max_queue = None if max_queue is None else int(max_queue)
         self._key = jax.random.key(seed)
+
+        # -- self-healing (the inverse of the tick watchdog) ----------------
+        # after `repromote_after` clean decode ticks on a demoted rung, a
+        # half-open probe re-compiles the original rung off the hot path
+        # and swaps it back if it passes the finite-logits guard.  None
+        # disables re-promotion (the PR-9 demote-forever behavior).  The
+        # ledger's clock is the engine tick counter, so breaker timing is
+        # deterministic per trace; state persists under <cache>/health/.
+        self.repromote_after = (None if repromote_after is None
+                                else int(repromote_after))
+        self._tick = 0
+        self._clean_ticks = 0
+        self._demote_stack: List[Tuple[object, str]] = []  # (cfg, rung)
+        self.repromotions = 0
+        self.probes = 0
+        self.probe_failures = 0
+        self.probe_compiles = 0      # compiles explained by probes
+        self._ledger = None
+        self._hkey = f"serve:{getattr(cfg, 'name', 'model')}:decode"
+        if self.repromote_after is not None:
+            if self.repromote_after <= 0:
+                raise ValueError("repromote_after must be > 0 (or None "
+                                 "to disable re-promotion)")
+            cache = pipeline.default_cache()
+            self._ledger = RZ.HealthLedger(
+                cache.root / "health" if cache.disk else None,
+                clock=lambda: float(self._tick))
+            self._breaker_policy = RZ.ResiliencePolicy(
+                breaker_threshold=1,  # one decode crash opens the breaker
+                breaker_cooldown_s=float(self.repromote_after),
+                breaker_cooldown_max_s=float(self.repromote_after) * 64)
+            # adopt persisted breaker state from a crashed/restarted
+            # predecessor: start demoted rather than re-crash the same
+            # rung, and re-open the cool-down against OUR tick clock
+            while True:
+                lbl = _backend_label(cfg)
+                if self._ledger.state(self._hkey, lbl) == "closed":
+                    break
+                new_cfg, _ = _demote_cfg(cfg)
+                if new_cfg is None:
+                    break
+                self._demote_stack.append((cfg, lbl))
+                self._ledger.reopen(self._hkey, lbl,
+                                    float(self.repromote_after))
+                warnings.warn(
+                    f"serve: decode rung {lbl!r} breaker is open in the "
+                    f"health ledger; starting demoted to "
+                    f"{_backend_label(new_cfg)!r}", RuntimeWarning,
+                    stacklevel=2)
+                cfg = new_cfg
+            self.cfg = cfg
 
         self.model = build_model(cfg)
         self.params, _ = self.model.init_params(jax.random.key(seed))
@@ -386,6 +458,13 @@ class Engine:
         if new_cfg is None:
             raise err
         jax = self._jax
+        if self._ledger is not None:
+            # open the failed rung's breaker (threshold 1: a decode crash
+            # is never cheap) so re-promotion waits out the cool-down
+            old_label = _backend_label(self.cfg)
+            self._demote_stack.append((self.cfg, old_label))
+            self._ledger.record_failure(self._hkey, old_label, err,
+                                        policy=self._breaker_policy)
         self.cfg = new_cfg
         self.model = build_model(new_cfg)
         m = self.model
@@ -398,6 +477,66 @@ class Engine:
             f"serve watchdog: decode step failed "
             f"({type(err).__name__}: {err}); demoted decode to {label} "
             "and continuing", RuntimeWarning, stacklevel=2)
+
+    def _probe_repromote(self, report: ServeReport, step: int,
+                         stats) -> bool:
+        """Half-open probe of the rung decode was demoted off: rebuild
+        it and run one decode step against the live KV cache *without*
+        committing its outputs (the real tick already ran).  A
+        finite-logits pass swaps the healthy rung back in and closes the
+        breaker; a failure re-opens it at doubled cool-down.  Probe
+        compiles are explained (excluded from ``strict_no_recompile``)
+        the same way demotion compiles are."""
+        from repro.models import build_model
+
+        jnp = self._jax.numpy
+        old_cfg, old_label = self._demote_stack[-1]
+        self.probes += 1
+        before = stats.snapshot()
+        try:
+            spec = RZ.fire("serve:probe")
+            if spec is not None and spec.kind == "raise":
+                raise RZ.InjectedFault(f"serve:probe[{spec.message}]")
+            model = build_model(old_cfg)
+            decode = self._jax.jit(model.decode_step)
+            logits, _ = decode(  # outputs discarded: probe only
+                self.params, self.caches,
+                jnp.asarray(self._token_vector()[:, None]),
+                jnp.asarray(self._pos_vector()))
+            if spec is not None and spec.kind == "nan":
+                logits = logits.at[:, -1].set(jnp.nan)
+            if not bool(jnp.all(jnp.isfinite(logits[:, -1]))):
+                raise RuntimeError("probe produced non-finite logits")
+        except Exception as e:
+            self.probe_failures += 1
+            self._ledger.record_failure(self._hkey, old_label, e,
+                                        policy=self._breaker_policy)
+            report.failures.append({
+                "reason": "probe_failed", "step": step, "rung": old_label,
+                "error": f"{type(e).__name__}: {e}"})
+            warnings.warn(
+                f"serve: re-promotion probe of {old_label!r} failed "
+                f"({type(e).__name__}: {e}); breaker re-opened at doubled "
+                "cool-down", RuntimeWarning, stacklevel=2)
+            self._clean_ticks = 0
+            self.probe_compiles += stats.delta(before).compiles
+            self._warm_stats = stats.snapshot()
+            return False
+        # healthy again: swap the probed decode in and close the breaker
+        self.cfg, self.model, self._decode = old_cfg, model, decode
+        self._demote_stack.pop()
+        self.repromotions += 1
+        self._ledger.record_success(self._hkey, old_label)
+        report.failures.append({
+            "reason": "decode_repromotion", "step": step, "to": old_label})
+        warnings.warn(
+            f"serve: decode rung {old_label!r} probed healthy after "
+            f"{self._clean_ticks} clean ticks; re-promoted",
+            RuntimeWarning, stacklevel=2)
+        self._clean_ticks = 0
+        self.probe_compiles += stats.delta(before).compiles
+        self._warm_stats = stats.snapshot()
+        return True
 
     def run(self, trace: Sequence[Request],
             max_steps: Optional[int] = None) -> ServeReport:
@@ -418,6 +557,7 @@ class Engine:
         while pending or self.queue or any(self.slots):
             if max_steps is not None and step >= max_steps:
                 break
+            self._tick = step  # the health ledger's deterministic clock
             t0 = time.perf_counter()
             while pending and pending[0].arrival_step <= step:
                 req = pending.popleft()
@@ -452,6 +592,7 @@ class Engine:
             if active:
                 try:
                     logits, caches = self._decode_once()
+                    self._clean_ticks += 1
                 except Exception as e:  # watchdog: demote, retry once
                     before = stats.snapshot()
                     self._watchdog_demote(e, step, report)
@@ -460,6 +601,7 @@ class Engine:
                     # strict_no_recompile armed for *unexplained* ones
                     self.demotion_compiles += stats.delta(before).compiles
                     self._warm_stats = stats.snapshot()
+                    self._clean_ticks = 0
                 self.caches = caches
                 spec = RZ.fire("serve:logits")
                 if spec is not None and spec.kind == "nan":
@@ -507,6 +649,13 @@ class Engine:
                             "step": step, "deadline": s.deadline})
                         report.tokens[s.rid] = s.generated
                         self.slots[i] = None
+            # re-promotion: after enough clean ticks on a demoted rung,
+            # let the breaker admit one half-open probe of the original
+            if (self._demote_stack and self._ledger is not None
+                    and self._clean_ticks >= self.repromote_after
+                    and self._ledger.decision(
+                        self._hkey, self._demote_stack[-1][1]) == "probe"):
+                self._probe_repromote(report, step, stats)
             wall_ms = (time.perf_counter() - t0) * 1e3
             token_lat_ms.extend([wall_ms] * (n_decode + n_prefill))
             occ = sum(1 for s in self.slots if s is not None)
@@ -544,6 +693,10 @@ class Engine:
         report.degradations = (RZ.METRICS.delta(self._base_metrics)
                                .demotions + self.watchdog_demotions)
         report.quarantined = stats.delta(self._base_stats).quarantined
+        report.repromotions = self.repromotions
+        report.probes = self.probes
+        report.probe_failures = self.probe_failures
+        report.decode_backend = _backend_label(self.cfg)
         if self.strict_no_recompile and report.decode_recompiles:
             raise RuntimeError(
                 f"{report.decode_recompiles} pipeline recompiles after "

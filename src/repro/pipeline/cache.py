@@ -39,6 +39,7 @@ import hashlib
 import json
 import os
 import pickle
+import time
 import warnings
 from dataclasses import asdict, dataclass, field, fields
 from pathlib import Path
@@ -77,6 +78,36 @@ _GRAPH_MAGIC = b"RPRGRPH1"
 CODEGEN_VERSION = 6
 
 DEFAULT_MAX_DISK_BYTES = 1 << 30  # 1 GiB
+
+# crash-recovery sweep thresholds (KernelCache.recover): a *.tmp file
+# whose embedded writer pid is dead — or older than this — is an orphan
+# from a crashed writer; a .lock nobody holds and older than this is
+# stale.  Quarantine is capped at a byte budget, oldest-first.
+STALE_TMP_AGE_S = 3600.0
+STALE_LOCK_AGE_S = 3600.0
+DEFAULT_QUARANTINE_MAX_BYTES = 64 << 20  # 64 MiB
+
+
+def _tmp_writer_pid(name: str) -> Optional[int]:
+    """The writer pid embedded in an ``{entry}.{pid}.tmp`` name, else
+    ``None`` (a tmp file this cache's writers did not produce)."""
+    parts = name.rsplit(".", 2)
+    if len(parts) == 3 and parts[2] == "tmp":
+        try:
+            return int(parts[1])
+        except ValueError:
+            return None
+    return None
+
+
+def _pid_alive(pid: int) -> bool:
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except (OSError, OverflowError):
+        return True  # EPERM etc.: some process owns it — assume alive
+    return True
 
 
 def _norm(d: Optional[Dict[str, Any]]) -> Tuple:
@@ -178,6 +209,10 @@ class CacheStats:
     write_errors: int = 0     # failed plan/graph writes (entry skipped)
     evict_errors: int = 0     # failed unlinks during LRU eviction
     io_errors: int = 0        # failed stat/utime/scan (entry degraded)
+    # -- startup crash-recovery sweep (KernelCache.recover) -------------
+    recovered_tmp: int = 0         # orphaned *.pid.tmp from dead writers
+    stale_locks: int = 0           # unheld, over-age .lock files removed
+    quarantine_evicted: int = 0    # quarantine files over the byte budget
 
     @property
     def compiles(self) -> int:
@@ -272,6 +307,132 @@ class KernelCache:
         self.max_disk_bytes = max_disk_bytes
         self._kernels: Dict[CacheKey, Any] = {}
         self.stats = CacheStats()
+        self._health = None
+        self.recover()
+
+    @property
+    def health(self):
+        """This cache's :class:`resilience.HealthLedger` — breaker state
+        for compile rungs, persisted under ``<root>/health/`` (memory-
+        only for ``disk=False`` caches).  Built lazily and performs zero
+        I/O until a rung actually fails."""
+        if self._health is None:
+            from repro import resilience as RZ
+            self._health = RZ.HealthLedger(
+                self.root / "health" if self.disk else None)
+        return self._health
+
+    # -- startup crash recovery --------------------------------------------
+    def recover(self) -> None:
+        """Crash-recovery sweep, run once per cache construction:
+
+        * remove orphaned ``*.{pid}.tmp`` files left by writers that
+          died between open and rename (dead pid, or over-age as the
+          cross-host fallback where the pid namespace differs);
+        * remove a stale ``.lock`` that no live process holds (flock
+          acquirable) once it is over-age;
+        * cap ``<root>/quarantine/`` at ``$REPRO_QUARANTINE_MAX_BYTES``
+          (oldest-first) so triage copies cannot grow without bound.
+
+        Every action is counted (``recovered_tmp`` / ``stale_locks`` /
+        ``quarantine_evicted``) and warned — never silent."""
+        if not self.disk:
+            return
+        try:
+            if not self.root.is_dir():
+                return
+        except OSError:
+            return
+        now = time.time()
+        for d in (self.root, self.root / "health"):
+            try:
+                tmps = sorted(d.glob("*.tmp"))
+            except OSError:
+                continue
+            for tmp in tmps:
+                pid = _tmp_writer_pid(tmp.name)
+                if pid is not None and pid != os.getpid() \
+                        and not _pid_alive(pid):
+                    orphan = True
+                else:
+                    # our own pid, a live writer, or an unparseable name:
+                    # only reclaim once clearly abandoned by age
+                    try:
+                        orphan = now - tmp.stat().st_mtime > STALE_TMP_AGE_S
+                    except OSError:
+                        continue
+                if not orphan:
+                    continue
+                try:
+                    tmp.unlink()
+                except OSError:
+                    continue
+                self.stats.recovered_tmp += 1
+                warnings.warn(
+                    f"kernel cache: recovered orphaned tmp file {tmp} "
+                    f"(writer pid {pid} is gone)", RuntimeWarning,
+                    stacklevel=2)
+        self._sweep_stale_lock(now)
+        self._cap_quarantine()
+
+    def _sweep_stale_lock(self, now: float) -> None:
+        lock = self.root / ".lock"
+        try:
+            age = now - lock.stat().st_mtime
+        except OSError:
+            return
+        if age <= STALE_LOCK_AGE_S:
+            return
+        try:
+            import fcntl
+            fd = os.open(str(lock), os.O_RDWR)
+        except (ImportError, OSError):
+            return
+        try:
+            try:
+                # acquirable => no live writer holds it => genuinely stale
+                fcntl.flock(fd, fcntl.LOCK_EX | fcntl.LOCK_NB)
+            except OSError:
+                return  # held by a live process: not stale
+            try:
+                lock.unlink()
+            except OSError:
+                return
+            self.stats.stale_locks += 1
+            warnings.warn(
+                f"kernel cache: removed stale lock {lock} "
+                f"(unheld, {age:.0f}s old)", RuntimeWarning, stacklevel=3)
+        finally:
+            os.close(fd)
+
+    def _cap_quarantine(self) -> int:
+        budget = int(os.environ.get("REPRO_QUARANTINE_MAX_BYTES",
+                                    DEFAULT_QUARANTINE_MAX_BYTES))
+        if budget < 0:
+            return 0  # negative budget disables the cap
+        try:
+            files = [(p, p.stat()) for p in self.quarantine_dir.iterdir()
+                     if p.is_file()]
+        except OSError:
+            return 0
+        total = sum(st.st_size for _, st in files)
+        evicted = 0
+        for p, st in sorted(files, key=lambda e: e[1].st_mtime):
+            if total <= budget:
+                break
+            try:
+                p.unlink()
+            except OSError:
+                continue
+            total -= st.st_size
+            evicted += 1
+        if evicted:
+            self.stats.quarantine_evicted += evicted
+            warnings.warn(
+                f"kernel cache: evicted {evicted} oldest quarantine "
+                f"file(s) over the {budget}-byte budget", RuntimeWarning,
+                stacklevel=3)
+        return evicted
 
     # -- in-process level ---------------------------------------------------
     def get_kernel(self, key: CacheKey):
@@ -314,6 +475,7 @@ class KernelCache:
         warnings.warn(
             f"kernel cache: quarantined corrupt entry {path} -> "
             f"{qdir / path.name} ({reason})", RuntimeWarning, stacklevel=3)
+        self._cap_quarantine()  # keep triage copies under the byte budget
 
     def get_plan(self, key: CacheKey
                  ) -> Tuple[Optional[CachePlan], Optional[Graph]]:

@@ -74,9 +74,12 @@ class CompileOptions:
     profile: Optional[Any] = None
     # degradation-ladder policy (resilience.ResiliencePolicy): how far a
     # failing compile may demote (grouped -> ungrouped -> jax ->
-    # interpreter), per-attempt timeout, retry budget.  None = the
-    # default policy (full ladder, no timeout, no retries), which keeps
-    # cache keys byte-identical to pre-resilience builds
+    # interpreter), per-attempt timeout, retry budget, and the health-
+    # ledger breaker knobs (breaker_threshold / breaker_cooldown_s /
+    # breaker_cooldown_max_s governing when a repeatedly-failing rung is
+    # skipped outright and when it is probed again).  None = the default
+    # policy (full ladder, no timeout, no retries, threshold-3 breaker),
+    # which keeps cache keys byte-identical to pre-resilience builds
     resilience: Optional[Any] = None
 
     def __post_init__(self):

@@ -1,0 +1,521 @@
+"""Self-healing rungs: the HealthLedger circuit breaker (state machine,
+checksummed persistence, zero-overhead happy path), ladder integration
+(skip known-open rungs, probe after cool-down), serving-engine
+re-promotion (demote -> clean ticks -> half-open probe -> swap back),
+the cache crash-recovery sweep, and cross-process cache contention."""
+
+import json
+import os
+import subprocess
+import sys
+import threading
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro import pipeline
+from repro import resilience as RZ
+from repro.pipeline import cache as C
+
+from test_lowering_coverage import PROGRAMS
+from test_resilience import _oracle, _tiny_cfg
+
+SRC = Path(pipeline.__file__).resolve().parents[2]
+
+
+@pytest.fixture()
+def fresh_cache(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_CACHE", str(tmp_path))
+    pipeline.reset_default_cache()
+    yield tmp_path
+    pipeline.reset_default_cache()
+
+
+@pytest.fixture(autouse=True)
+def _no_env_plan(monkeypatch):
+    monkeypatch.delenv("REPRO_FAULT_PLAN", raising=False)
+    RZ.install(None)
+    yield
+    RZ.install(None)
+
+
+# ---------------------------------------------------------------------------
+# the breaker state machine (memory-only, injectable clock)
+# ---------------------------------------------------------------------------
+
+def test_breaker_closed_open_halfopen_cycle():
+    clk = [0.0]
+    led = RZ.HealthLedger(None, clock=lambda: clk[0])
+    pol = RZ.ResiliencePolicy(breaker_threshold=2, breaker_cooldown_s=10.0)
+    key = "fp-abc"
+    assert led.decision(key, "grouped") == "closed"
+    assert led.record_failure(key, "grouped", "boom", policy=pol) == "closed"
+    assert led.record_failure(key, "grouped", "boom", policy=pol) == "open"
+    assert led.decision(key, "grouped") == "open"
+    assert led.stats.trips == 1 and led.stats.skipped_open == 1
+    # cool-down elapses -> exactly one half-open probe is admitted
+    clk[0] = 10.0
+    assert led.decision(key, "grouped") == "probe"
+    assert led.state(key, "grouped") == "half_open"
+    # a failed probe re-opens at DOUBLED cool-down
+    assert led.record_failure(key, "grouped", "still bad",
+                              policy=pol) == "open"
+    e = led.entry(key, "grouped")
+    assert e.cooldown_s == 20.0 and e.open_until == 30.0
+    assert led.decision(key, "grouped") == "open"
+    clk[0] = 30.0
+    assert led.decision(key, "grouped") == "probe"
+    # a passing probe closes the breaker and drops the entry entirely
+    led.record_success(key, "grouped")
+    assert led.decision(key, "grouped") == "closed"
+    assert led.entry(key, "grouped") is None
+    assert led.stats.resets == 1
+
+
+def test_breaker_cooldown_caps_and_threshold_zero_disables():
+    clk = [0.0]
+    led = RZ.HealthLedger(None, clock=lambda: clk[0])
+    pol = RZ.ResiliencePolicy(breaker_threshold=1, breaker_cooldown_s=10.0,
+                              breaker_cooldown_max_s=25.0)
+    led.record_failure("k", "jax", "x", policy=pol)
+    for expect in (20.0, 25.0, 25.0):  # doubles, then pins at the cap
+        clk[0] = led.entry("k", "jax").open_until
+        assert led.decision("k", "jax") == "probe"
+        led.record_failure("k", "jax", "x", policy=pol)
+        assert led.entry("k", "jax").cooldown_s == expect
+    # threshold 0 disables the breaker: failures never open it
+    off = RZ.HealthLedger(None)
+    zero = RZ.ResiliencePolicy(breaker_threshold=0)
+    for _ in range(5):
+        assert off.record_failure("k", "jax", "x", policy=zero) == "disabled"
+    assert off.decision("k", "jax") == "closed"
+    with pytest.raises(ValueError, match="breaker_threshold"):
+        RZ.ResiliencePolicy(breaker_threshold=-1)
+
+
+def test_halfopen_probe_owner_crash_admits_another_after_cooldown():
+    clk = [0.0]
+    led = RZ.HealthLedger(None, clock=lambda: clk[0])
+    pol = RZ.ResiliencePolicy(breaker_threshold=1, breaker_cooldown_s=10.0)
+    led.record_failure("k", "grouped", "x", policy=pol)
+    clk[0] = 10.0
+    assert led.decision("k", "grouped") == "probe"
+    # the probe's owner never reported back; concurrent callers wait...
+    assert led.decision("k", "grouped") == "open"
+    # ...until a full cool-down has passed, then another probe is allowed
+    clk[0] = 20.0
+    assert led.decision("k", "grouped") == "probe"
+
+
+# ---------------------------------------------------------------------------
+# persistence: checksummed envelopes, fresh-process round-trip, corruption
+# ---------------------------------------------------------------------------
+
+def test_ledger_roundtrips_across_a_fresh_process(tmp_path):
+    """Breaker state written by a REAL separate process is read back
+    here: rung health survives restarts and is shared cross-process."""
+    hroot = tmp_path / "health"
+    script = (
+        "import sys\n"
+        "sys.path.insert(0, sys.argv[2])\n"
+        "from repro import resilience as RZ\n"
+        "led = RZ.HealthLedger(sys.argv[1], clock=lambda: 100.0)\n"
+        "pol = RZ.ResiliencePolicy(breaker_threshold=2,\n"
+        "                          breaker_cooldown_s=50.0)\n"
+        "led.record_failure('fp-x', 'grouped', 'boom', policy=pol)\n"
+        "led.record_failure('fp-x', 'grouped', 'boom', policy=pol)\n"
+    )
+    subprocess.run([sys.executable, "-c", script, str(hroot), str(SRC)],
+                   check=True, timeout=120)
+    envs = list(hroot.glob("*.json"))
+    assert len(envs) == 1
+    env = json.loads(envs[0].read_text())
+    assert set(env) == {"schema", "sha256", "entry"} and len(env["sha256"]) == 64
+    assert not list(hroot.glob("*.tmp"))  # atomic write left no temp files
+
+    clk = [120.0]
+    led = RZ.HealthLedger(hroot, clock=lambda: clk[0])
+    assert led.state("fp-x", "grouped") == "open"
+    assert led.stats.reads == 1
+    e = led.entry("fp-x", "grouped")
+    assert (e.failures, e.trips, e.open_until) == (2, 1, 150.0)
+    assert "boom" in e.last_error
+    assert led.decision("fp-x", "grouped") == "open"
+    clk[0] = 150.0
+    assert led.decision("fp-x", "grouped") == "probe"
+    # recovery unlinks the envelope: the dir is pristine again
+    led.record_success("fp-x", "grouped")
+    assert list(hroot.glob("*.json")) == []
+
+
+def test_corrupt_envelope_fails_open_and_is_discarded(tmp_path):
+    hroot = tmp_path / "health"
+    led = RZ.HealthLedger(hroot)
+    pol = RZ.ResiliencePolicy(breaker_threshold=1)
+    led.record_failure("fp", "grouped", "x", policy=pol)
+    path = next(hroot.glob("*.json"))
+    path.write_text(path.read_text()[:40] + "garbage")
+    fresh = RZ.HealthLedger(hroot)
+    with pytest.warns(RuntimeWarning, match="corrupt entry"):
+        # a broken ledger must never take a healthy rung out of service
+        assert fresh.decision("fp", "grouped") == "closed"
+    assert fresh.stats.corrupt == 1
+    assert not path.exists()  # discarded, not re-read forever
+
+
+def test_happy_path_is_zero_ledger_io(tmp_path):
+    """The acceptance pin: a clean compile performs no ledger reads or
+    writes and never even creates <cache>/health/."""
+    cache = C.KernelCache(root=tmp_path)
+    build, dims, _ = PROGRAMS["layernorm_matmul"]
+    kern = pipeline.compile(build(), dims, backend="jax", cache=cache)
+    assert kern.resilience_report.rung == "jax"
+    assert not (tmp_path / "health").exists()
+    st = cache.health.stats
+    assert (st.reads, st.writes, st.skipped_open, st.probes) == (0, 0, 0, 0)
+
+
+# ---------------------------------------------------------------------------
+# ladder integration: skip open rungs instantly, probe after cool-down
+# ---------------------------------------------------------------------------
+
+def test_ladder_skips_open_rung_and_probes_after_cooldown(tmp_path):
+    build, dims, _ = PROGRAMS["layernorm_matmul"]
+    g = build()
+    cache = C.KernelCache(root=tmp_path)
+    clk = [0.0]
+    cache.health.clock = lambda: clk[0]
+    pol = RZ.ResiliencePolicy(breaker_threshold=2, breaker_cooldown_s=100.0,
+                              retries=0)
+    opts = pipeline.CompileOptions(backend="jax", resilience=pol)
+    plan = RZ.FaultPlan([RZ.FaultSpec(site="compile:jax", indices=(0, 1))])
+    with RZ.faults(plan), pytest.warns(RuntimeWarning,
+                                       match="compile ladder"):
+        k1 = pipeline.compile(g, {**dims, "M": 2}, options=opts,
+                              cache=cache)
+        k2 = pipeline.compile(g, {**dims, "M": 4}, options=opts,
+                              cache=cache)
+        assert k1.rung == k2.rung == "interpreter"
+        # two consecutive jax failures tripped the breaker: the third
+        # compile skips the rung INSTANTLY — compile:jax is never called
+        before = RZ.METRICS.snapshot()
+        with pytest.warns(RuntimeWarning, match="breaker open"):
+            k3 = pipeline.compile(g, {**dims, "M": 8}, options=opts,
+                                  cache=cache)
+        assert plan.calls("compile:jax") == 2
+        assert k3.rung == "interpreter"
+        rr = k3.resilience_report
+        assert rr.attempts[0].skipped_open and not rr.attempts[0].ok
+        assert rr.skipped_open == 1
+        assert RZ.METRICS.delta(before).skipped_open == 1
+        # METRICS.demotions untouched by the skip (chaos gates pin it)
+        assert RZ.METRICS.delta(before).demotions == 0
+
+        # the open state is SHARED: a fresh cache on the same dir sees it
+        assert C.KernelCache(root=tmp_path).health.state(
+            g.fingerprint(), "jax") == "open"
+
+        # cool-down elapses -> the next compile probes and recovers
+        clk[0] = 100.0
+        before = RZ.METRICS.snapshot()
+        k4 = pipeline.compile(g, {**dims, "M": 16}, options=opts,
+                              cache=cache)
+        assert k4.rung == "jax"
+        assert k4.resilience_report.attempts[0].probe
+        assert k4.resilience_report.probes == 1
+        assert RZ.METRICS.delta(before).probes == 1
+    # recovery removed the entry: the health dir is pristine again
+    assert list((tmp_path / "health").glob("*.json")) == []
+
+
+def test_attempt_wall_times_recorded_for_timeout_calibration():
+    rr = RZ.ResilienceReport(requested="grouped")
+    rr.attempts = [
+        RZ.Attempt("grouped", False, 0.0, skipped_open=True),
+        RZ.Attempt("ungrouped", False, 0.8, error="X: y"),
+        RZ.Attempt("ungrouped", True, 0.5, retry=1),
+        RZ.Attempt("jax", True, 0.1),
+    ]
+    walls = rr.wall_by_rung()
+    assert "grouped" not in walls  # skipped rungs never ran: no sample
+    assert walls["ungrouped"] == [0.8, 0.5] and walls["jax"] == [0.1]
+    assert rr.suggest_timeout_s(margin=4.0) == pytest.approx(2.0)
+    assert RZ.ResilienceReport().suggest_timeout_s() is None
+    js = json.loads(json.dumps(rr.to_json()))
+    assert js["skipped_open"] == 1 and js["probes"] == 0
+
+
+def test_run_with_timeout_daemon_worker_counted_and_transparent():
+    before = RZ.METRICS.snapshot()
+    started = threading.Event()
+
+    def hang():
+        started.set()
+        time.sleep(30)
+
+    with pytest.raises(RZ.AttemptTimeout):
+        RZ.run_with_timeout(hang, 0.1)
+    assert started.wait(5)
+    workers = [t for t in threading.enumerate()
+               if t.name.startswith("repro-ladder")]
+    # the leaked worker is daemonic: it can never block process exit
+    assert workers and all(t.daemon for t in workers)
+    assert RZ.METRICS.delta(before).abandoned_workers == 1
+    # the non-timeout paths stay transparent: values and exceptions
+    assert RZ.run_with_timeout(lambda: 7, 5.0) == 7
+    with pytest.raises(ZeroDivisionError):
+        RZ.run_with_timeout(lambda: 1 // 0, 5.0)
+    assert RZ.METRICS.delta(before).abandoned_workers == 1
+
+
+# ---------------------------------------------------------------------------
+# serving-engine re-promotion: the inverse of the PR-9 watchdog
+# ---------------------------------------------------------------------------
+
+def test_engine_self_heals_end_to_end(fresh_cache):
+    """The acceptance path: a transient decode fault demotes decode to
+    the jax rung; after `repromote_after` clean ticks a half-open probe
+    re-compiles the pallas rung and swaps it back mid-run.  Tokens stay
+    byte-identical to the sequential oracle and the ledger entry clears."""
+    from repro.launch.engine import Engine, synth_trace
+    engine = Engine(_tiny_cfg("pallas"), max_batch=2, max_len=32,
+                    prompt_buckets=(8,), sampling="greedy", seed=0,
+                    repromote_after=2)
+    trace = synth_trace(4, seed=1, arrival_rate=1.0, prompt_lens=(2, 7),
+                        gen_lens=(3, 5), vocab=engine.cfg.vocab)
+    plan = RZ.FaultPlan([RZ.FaultSpec(site="serve:decode", indices=(1,),
+                                      message="transient decode fault")])
+    with RZ.faults(plan), pytest.warns(RuntimeWarning,
+                                       match="re-promoted"):
+        report = engine.run(trace)
+    assert report.n_completed == len(trace)
+    assert engine.watchdog_demotions == 1
+    assert (report.repromotions, report.probes,
+            report.probe_failures) == (1, 1, 0)
+    # decode ended the run back on the grouped pallas rung
+    assert report.decode_backend == "pipeline-pallas"
+    demote = [f for f in report.failures
+              if f["reason"] == "decode_demotion"]
+    heal = [f for f in report.failures
+            if f["reason"] == "decode_repromotion"]
+    assert len(demote) == 1 and demote[0]["to"] == "pipeline-jax"
+    assert len(heal) == 1 and heal[0]["to"] == "pipeline-pallas"
+    # cool-down honored: the probe waited >= repromote_after clean ticks
+    assert heal[0]["step"] - demote[0]["step"] >= 2
+    # probe compiles are explained: strict_no_recompile stayed armed
+    assert report.decode_recompiles == 0
+    # non-poisoned tokens byte-identical to the sequential oracle (the
+    # engine's model is the re-promoted pallas impl again)
+    for req in trace:
+        assert report.tokens[req.rid] == _oracle(engine, req)
+    # recovery closed the breaker: the persisted entry is gone
+    led = RZ.HealthLedger(pipeline.default_cache().root / "health")
+    assert led.state(engine._hkey, "pipeline-pallas") == "closed"
+    d = json.loads(json.dumps(report.to_json()))
+    assert d["repromotions"] == 1 and d["decode_backend"] == "pipeline-pallas"
+
+
+def test_engine_failed_probe_reopens_at_doubled_cooldown(fresh_cache):
+    from repro.launch.engine import Engine, synth_trace
+    engine = Engine(_tiny_cfg("pallas"), max_batch=2, max_len=48,
+                    prompt_buckets=(8,), sampling="greedy", seed=0,
+                    repromote_after=2)
+    trace = synth_trace(6, seed=2, arrival_rate=1.0, prompt_lens=(2, 7),
+                        gen_lens=(5, 7), vocab=engine.cfg.vocab)
+    plan = RZ.FaultPlan([
+        RZ.FaultSpec(site="serve:decode", indices=(1,)),
+        RZ.FaultSpec(site="serve:probe", indices=(0,),
+                     message="probe still cold"),
+    ])
+    with RZ.faults(plan), pytest.warns(RuntimeWarning,
+                                       match="probe"):
+        report = engine.run(trace)
+    assert (report.repromotions, report.probes,
+            report.probe_failures) == (1, 2, 1)
+    assert report.decode_backend == "pipeline-pallas"
+    failed = [f for f in report.failures if f["reason"] == "probe_failed"]
+    healed = [f for f in report.failures
+              if f["reason"] == "decode_repromotion"]
+    assert len(failed) == 1 and len(healed) == 1
+    # the failed probe doubled the cool-down: the second probe waited
+    # at least 2 * repromote_after ticks after the first
+    assert healed[0]["step"] - failed[0]["step"] >= 4
+    assert report.n_completed == len(trace)
+    assert report.decode_recompiles == 0
+
+
+def test_engine_adopts_persisted_breaker_state_across_processes(fresh_cache):
+    """A predecessor process crashed the pallas decode rung and died
+    before healing: a new engine adopts the persisted open breaker,
+    starts demoted, then probes and re-promotes — cross-process healing
+    with zero watchdog demotions in THIS process."""
+    from repro.launch.engine import Engine, synth_trace
+    cfg = _tiny_cfg("pallas")
+    hroot = pipeline.default_cache().root / "health"
+    RZ.HealthLedger(hroot).reopen(
+        f"serve:{cfg.name}:decode", "pipeline-pallas", 1000.0,
+        error="predecessor decode crash")
+    with pytest.warns(RuntimeWarning, match="starting demoted"):
+        engine = Engine(cfg, max_batch=2, max_len=32, prompt_buckets=(8,),
+                        sampling="greedy", seed=0, repromote_after=2)
+    # the engine came up on the demoted rung without crashing first
+    assert engine._demote_stack and engine.watchdog_demotions == 0
+    trace = synth_trace(4, seed=1, arrival_rate=1.0, prompt_lens=(2, 7),
+                        gen_lens=(3, 5), vocab=engine.cfg.vocab)
+    with pytest.warns(RuntimeWarning, match="re-promoted"):
+        report = engine.run(trace)
+    assert report.repromotions == 1
+    assert report.decode_backend == "pipeline-pallas"
+    assert report.degradations == 0  # nothing demoted in THIS process
+    assert report.n_completed == len(trace)
+
+
+def test_clean_engine_run_zero_probe_counters_and_zero_ledger_io(fresh_cache):
+    from repro.launch.engine import Engine, synth_trace
+    engine = Engine(_tiny_cfg("jax"), max_batch=2, max_len=32,
+                    prompt_buckets=(8,), sampling="greedy", seed=0)
+    trace = synth_trace(3, seed=0, arrival_rate=1.0, prompt_lens=(2, 6),
+                        gen_lens=(2, 4), vocab=engine.cfg.vocab)
+    report = engine.run(trace)
+    assert (report.repromotions, report.probes,
+            report.probe_failures) == (0, 0, 0)
+    assert report.decode_backend == "pipeline-jax"
+    st = engine._ledger.stats
+    assert (st.reads, st.writes, st.probes, st.skipped_open) == (0, 0, 0, 0)
+    assert not (pipeline.default_cache().root / "health").exists()
+
+
+# ---------------------------------------------------------------------------
+# cache crash-recovery sweep
+# ---------------------------------------------------------------------------
+
+def test_recovery_sweep_removes_dead_writer_tmp_files(tmp_path):
+    # a pid guaranteed dead: a subprocess that already exited
+    p = subprocess.Popen([sys.executable, "-c", "pass"])
+    p.wait()
+    dead = tmp_path / f"abc.json.{p.pid}.tmp"
+    dead.write_text("half-written plan from a crashed writer")
+    live = tmp_path / f"def.json.{os.getpid()}.tmp"
+    live.write_text("an in-flight write by a live process")
+    foreign_old = tmp_path / "weird.tmp"  # no pid: age decides
+    foreign_old.write_text("x")
+    os.utime(foreign_old, (0, 0))
+    with pytest.warns(RuntimeWarning, match="orphaned tmp"):
+        kc = C.KernelCache(root=tmp_path)
+    assert kc.stats.recovered_tmp == 2
+    assert not dead.exists() and not foreign_old.exists()
+    assert live.exists()  # never races a live writer
+
+
+def test_recovery_sweep_removes_stale_unheld_lock(tmp_path):
+    lock = tmp_path / ".lock"
+    lock.write_text("")
+    os.utime(lock, (0, 0))  # ancient and nobody holds it
+    with pytest.warns(RuntimeWarning, match="stale lock"):
+        kc = C.KernelCache(root=tmp_path)
+    assert kc.stats.stale_locks == 1 and not lock.exists()
+
+
+def test_recovery_sweep_spares_a_held_lock(tmp_path):
+    import fcntl
+    lock = tmp_path / ".lock"
+    lock.write_text("")
+    os.utime(lock, (0, 0))
+    fd = os.open(str(lock), os.O_RDWR)
+    try:
+        fcntl.flock(fd, fcntl.LOCK_EX)  # a live writer holds it
+        kc = C.KernelCache(root=tmp_path)
+        assert kc.stats.stale_locks == 0 and lock.exists()
+    finally:
+        os.close(fd)
+
+
+def test_quarantine_capped_at_byte_budget_oldest_first(tmp_path,
+                                                       monkeypatch):
+    monkeypatch.setenv("REPRO_QUARANTINE_MAX_BYTES", "100")
+    qdir = tmp_path / "quarantine"
+    qdir.mkdir(parents=True)
+    for name, size, mtime in (("old.json", 60, 1000.0),
+                              ("mid.json", 60, 2000.0),
+                              ("new.json", 30, 3000.0)):
+        f = qdir / name
+        f.write_bytes(b"x" * size)
+        os.utime(f, (mtime, mtime))
+    with pytest.warns(RuntimeWarning, match="quarantine"):
+        kc = C.KernelCache(root=tmp_path)
+    assert kc.stats.quarantine_evicted == 1
+    assert sorted(p.name for p in qdir.iterdir()) == ["mid.json",
+                                                      "new.json"]
+
+
+def test_recovery_sweep_is_silent_on_a_clean_cache(tmp_path, recwarn):
+    kc = C.KernelCache(root=tmp_path)  # dir does not even exist yet
+    st = kc.stats
+    assert (st.recovered_tmp, st.stale_locks, st.quarantine_evicted) == \
+        (0, 0, 0)
+    mem = C.KernelCache(disk=False)  # memory-only caches never sweep
+    assert mem.stats.recovered_tmp == 0
+    assert not [w for w in recwarn.list
+                if "kernel cache" in str(w.message)]
+
+
+# ---------------------------------------------------------------------------
+# cross-process cache contention
+# ---------------------------------------------------------------------------
+
+_CONTENTION_SCRIPT = """
+import hashlib, json, sys
+sys.path.insert(0, sys.argv[1])
+from repro import pipeline
+from repro.core import array_program as AP
+
+g = AP.layernorm_matmul_program(32.0)
+dims = {"M": 2, "K": 4, "N": 2}
+kern = pipeline.compile(g, dims, backend="py")
+cache = pipeline.default_cache()
+key = pipeline.CacheKey.make(
+    g.fingerprint(), "py", dims, None, True,
+    pipeline.CompileOptions(backend="py").cache_opts(
+        stabilized=False, autotuned=False))
+plan_path = cache.root / (key.digest() + ".json")
+print(json.dumps({
+    "cost": kern.cost,
+    "snapshot": kern.snapshot_index,
+    "sha": hashlib.sha256(plan_path.read_bytes()).hexdigest(),
+}))
+"""
+
+
+def test_cross_process_contention_same_key(tmp_path):
+    """Two subprocesses compile the same (fingerprint, dims, options)
+    key concurrently: both succeed, the surviving on-disk plan is
+    byte-identical from both sides, and nothing is quarantined or left
+    half-written."""
+    env = dict(os.environ, REPRO_KERNEL_CACHE=str(tmp_path))
+    env.pop("REPRO_FAULT_PLAN", None)
+    procs = [subprocess.Popen(
+        [sys.executable, "-c", _CONTENTION_SCRIPT, str(SRC)],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, env=env,
+        text=True) for _ in range(2)]
+    outs = []
+    for p in procs:
+        out, err = p.communicate(timeout=300)
+        assert p.returncode == 0, err
+        outs.append(json.loads(out.strip().splitlines()[-1]))
+    assert outs[0] == outs[1]  # same plan, byte-identical envelope
+
+    # zero corruption, zero leftovers, exactly one entry
+    assert not list(tmp_path.glob("*.tmp"))
+    assert not (tmp_path / "quarantine").exists()
+    assert len(list(tmp_path.glob("*.json"))) == 1
+    kc = C.KernelCache(root=tmp_path)
+    assert (kc.stats.recovered_tmp, kc.stats.stale_locks) == (0, 0)
+    # and the surviving entry reads back clean in this process
+    from repro.core import array_program as AP
+    g = AP.layernorm_matmul_program(32.0)
+    kern = pipeline.compile(g, {"M": 2, "K": 4, "N": 2}, backend="py",
+                            cache=kc)
+    assert kern.cache_hit == "disk"
+    assert kc.stats.corrupt_plans == 0 and kc.stats.quarantined == 0

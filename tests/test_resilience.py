@@ -59,7 +59,7 @@ def test_ladder_order_and_rungs_from():
 def test_policy_is_frozen_hashable_and_keyed():
     p = RZ.ResiliencePolicy(max_rung="jax", retries=2)
     assert hash(p) != hash(RZ.DEFAULT_POLICY)
-    assert p.key() == ("jax", None, 2, 0.05)
+    assert p.key() == ("jax", None, 2, 0.05, 3, 60.0, 3600.0)
     with pytest.raises(ValueError):
         RZ.ResiliencePolicy(max_rung="nope")
     # non-default policies land in the cache-key opts; the default stays
